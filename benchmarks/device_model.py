@@ -1,0 +1,128 @@
+"""GPU-architectural cost model for spMTTKRP formats.
+
+The paper's wins come from GPU mechanisms a CPU cannot exhibit (atomic
+serialization, SM idling, L1-resident accumulators), so wall-clock on
+this container inverts the published ordering.  This model prices each
+format from MEASURED layout statistics — per-partition loads, per-row
+conflict degrees, bytes moved — using RTX-3090-class constants, and is
+the instrument used to compare against the paper's Fig. 3/4 ratios.
+Every term is listed below; change the constants to re-price.
+
+time(mode) = t_traffic + t_atomic + t_launch
+  t_traffic = bytes_moved/BW * imbalance   (imbalance = max_load*kappa/total:
+              SMs finish when the slowest partition finishes; scheme 1 on a
+              mode with I_d < kappa leaves SMs idle -> imbalance > 1)
+  t_atomic  = nnz*R atomic adds at ATOMIC_TPUT.  Local (L1) atomics cost
+              LOCAL_FACTOR of global (paper's scheme-1 Local_Update);
+              UNSORTED formats pay UNSORTED_FACTOR extra (random-address
+              conflicts; sorted traversals stream each output line once).
+  t_launch  = per-mode fixed cost (kernel scheduling).
+
+The model reproduces the paper's adaptive-vs-forced-scheme ratios from
+measured partitionings; absolute baseline gaps (ParTI/MM-CSF 8-9x) also
+include those systems' implementation overheads (per-iteration resorts,
+semi-sparse intermediates, kernel-launch storms) that a first-principles
+traffic+atomics model deliberately does not invent — see EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import SparseTensor
+from repro.core.load_balance import Scheme, partition_mode
+
+BW = 936.2e9          # GDDR6X B/s (Table II)
+ATOMIC_TPUT = 1.2e11  # global atomic adds/s across the device
+LOCAL_FACTOR = 0.1    # L1/shared atomic cost vs global
+UNSORTED_FACTOR = 2.0  # random-address atomic conflicts (unsorted COO)
+LAUNCH = 2e-6         # s per mode sweep
+KAPPA = 82
+R = 32
+F4 = 4                # fp32 bytes
+
+
+@dataclasses.dataclass
+class ModeCost:
+    traffic_s: float
+    atomic_s: float
+    total_s: float
+    bytes_moved: float
+    imbalance: float
+
+
+def _gather_bytes(t: SparseTensor, mode: int) -> float:
+    """nnz reads + input-factor row gathers (all formats pay these)."""
+    N = t.nmodes
+    return t.nnz * (4 * N + 4) + t.nnz * (N - 1) * R * F4
+
+
+def _atomic_cost(nnz_updates: float, I_d: int, *, local: bool,
+                 kappa: int = KAPPA, unsorted: bool = False) -> float:
+    c = nnz_updates * R / ATOMIC_TPUT
+    if local:
+        return c * LOCAL_FACTOR
+    return c * (UNSORTED_FACTOR if unsorted else 1.0)
+
+
+def mode_cost(t: SparseTensor, mode: int, fmt: str, *,
+              scheme: Scheme | None = None, kappa: int = KAPPA) -> ModeCost:
+    deg = t.mode_degrees(mode)
+    max_deg = float(deg.max()) if len(deg) else 0.0
+    I_d = t.shape[mode]
+    base_bytes = _gather_bytes(t, mode)
+    out_bytes = I_d * R * F4
+
+    if fmt == "ours":
+        sch = scheme or (Scheme.INDEX_PARTITION if I_d >= kappa
+                         else Scheme.NNZ_PARTITION)
+        part = partition_mode(t, mode, kappa, scheme=sch)
+        imb = part.imbalance()
+        bytes_moved = base_bytes + out_bytes
+        if sch == Scheme.INDEX_PARTITION:
+            # partition-private rows: L1-resident accumulators, no global
+            # atomics (sorted segmented update)
+            atomic = _atomic_cost(t.nnz, I_d, local=True, kappa=kappa)
+        else:
+            # shared rows: global atomics, but perfectly balanced nnz
+            atomic = _atomic_cost(t.nnz, I_d, local=False, kappa=kappa)
+    elif fmt == "naive-coo":
+        # ParTI-like: materialized (nnz, R) KRP intermediate (write+read) +
+        # global atomic RMW on the output
+        part = partition_mode(t, mode, kappa, scheme=Scheme.NNZ_PARTITION)
+        imb = part.imbalance()
+        bytes_moved = base_bytes + out_bytes + 2 * t.nnz * R * F4 \
+            + 2 * t.nnz * R * F4
+        atomic = _atomic_cost(t.nnz, I_d, local=False, kappa=kappa,
+                              unsorted=True)
+    elif fmt == "csf-like":
+        # MM-CSF-like: fused+fiber-local for its ONE sorted mode, global
+        # atomics when traversing in the wrong mode order
+        fused = mode == 0
+        part = partition_mode(t, mode, kappa, scheme=Scheme.NNZ_PARTITION)
+        imb = part.imbalance()
+        bytes_moved = base_bytes + out_bytes + (0 if fused else t.nnz * R * F4)
+        atomic = _atomic_cost(t.nnz, I_d, local=fused, kappa=kappa,
+                              unsorted=not fused)
+    elif fmt == "blco-like":
+        # BLCO: single linearized copy (8B keys), on-the-fly unpack, block
+        # conflict resolution ~ hierarchical atomics (between local/global)
+        part = partition_mode(t, mode, kappa, scheme=Scheme.NNZ_PARTITION)
+        imb = part.imbalance()
+        bytes_moved = t.nnz * 8 + t.nnz * (t.nmodes - 1) * R * F4 + out_bytes \
+            + t.nnz * R * F4 * 0.5
+        atomic = 0.6 * _atomic_cost(t.nnz, I_d, local=False, kappa=kappa)
+    else:
+        raise ValueError(fmt)
+
+    traffic = bytes_moved / BW * imb
+    total = traffic + atomic + LAUNCH
+    return ModeCost(traffic, atomic, total, bytes_moved, imb)
+
+
+def total_cost(t: SparseTensor, fmt: str, *, scheme=None, kappa=KAPPA) -> float:
+    return sum(
+        mode_cost(t, d, fmt, scheme=scheme, kappa=kappa).total_s
+        for d in range(t.nmodes)
+    )

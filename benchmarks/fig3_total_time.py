@@ -1,0 +1,73 @@
+"""Fig. 3 — total execution time: ours vs baseline formats.
+
+Paper claims (RTX 3090, CUDA): geomean speedup 2.4x vs BLCO, 8.9x vs
+MM-CSF, 7.9x vs ParTI.
+
+Three instruments, strongest first:
+  device-model  GPU-architectural cost model fed by measured layout
+                statistics (benchmarks/device_model.py) — the
+                apples-to-apples comparison against the paper's numbers.
+  traffic       bytes-moved ratios (hardware-independent lower bound).
+  cpu-wall      wall clock of the JAX re-implementations on this CPU
+                container — reported for transparency; a CPU has no SMs,
+                atomics or L1-resident accumulators, so the published
+                ordering is NOT expected to hold here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (BLCOLikeEngine, CSFLikeEngine, engine_naive_coo,
+                     engine_ours, load_datasets, time_engine, traffic_model)
+from .device_model import total_cost
+
+FMTS = ("blco-like", "csf-like", "naive-coo")
+
+
+def run(iters: int = 2) -> list[dict]:
+    rows = []
+    for name, t in load_datasets().items():
+        engines = {
+            "ours": engine_ours,
+            "blco-like": BLCOLikeEngine(t),
+            "csf-like": CSFLikeEngine(t),
+            "naive-coo": engine_naive_coo,
+        }
+        row = {"dataset": name, "nnz": t.nnz, "shape": t.shape}
+        for fmt, eng in engines.items():
+            r = time_engine(t, eng, iters=iters)
+            row[f"{fmt}_cpu_s"] = r["mttkrp_seconds"]
+            row[f"{fmt}_traffic"] = traffic_model(t, fmt)
+            row[f"{fmt}_model_s"] = total_cost(t, fmt)
+        for fmt in FMTS:
+            row[f"model_speedup_vs_{fmt}"] = (
+                row[f"{fmt}_model_s"] / row["ours_model_s"])
+            row[f"traffic_ratio_vs_{fmt}"] = (
+                row[f"{fmt}_traffic"] / row["ours_traffic"])
+            row[f"cpu_speedup_vs_{fmt}"] = (
+                row[f"{fmt}_cpu_s"] / row["ours_cpu_s"])
+        rows.append(row)
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    geo = {f: [] for f in FMTS}
+    for r in rows:
+        print(f"fig3/{r['dataset']}/ours,{r['ours_model_s']*1e6:.0f},"
+              f"nnz={r['nnz']};cpu_s={r['ours_cpu_s']:.3f}")
+        for fmt in FMTS:
+            print(f"fig3/{r['dataset']}/{fmt},{r[f'{fmt}_model_s']*1e6:.0f},"
+                  f"model_speedup={r[f'model_speedup_vs_{fmt}']:.2f}x;"
+                  f"traffic_ratio={r[f'traffic_ratio_vs_{fmt}']:.2f}x;"
+                  f"cpu_speedup={r[f'cpu_speedup_vs_{fmt}']:.2f}x")
+            geo[fmt].append(r[f"model_speedup_vs_{fmt}"])
+    paper = {"blco-like": "2.4x", "csf-like": "8.9x", "naive-coo": "7.9x"}
+    for fmt, v in geo.items():
+        gm = float(np.exp(np.mean(np.log(v))))
+        print(f"fig3/geomean_model_speedup_vs_{fmt},{gm:.3f},paper={paper[fmt]}")
+
+
+if __name__ == "__main__":
+    main()

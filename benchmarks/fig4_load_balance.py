@@ -1,0 +1,84 @@
+"""Fig. 4 — impact of the adaptive load-balancing scheme.
+
+Paper claim: adaptive gives geomean 2.2x over scheme-1-only and 1.3x over
+scheme-2-only.  Mechanisms: scheme 1 on a small output mode cannot fill
+all SMs (idling); scheme 2 on a large output mode pays global atomics.
+The device cost model prices both from measured partitionings; CPU wall
+time is reported as a proxy alongside.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Scheme, partition_mode
+from repro.core.load_balance import choose_scheme
+
+from .common import KAPPA, engine_ours, load_datasets, time_engine
+from .device_model import total_cost
+
+
+def _cost_policy_total(t, kappa=KAPPA):
+    """Beyond-paper: per-mode argmin of the modeled cost (see
+    core.load_balance.choose_scheme_cost_based)."""
+    from repro.core.load_balance import choose_scheme_cost_based
+    from .device_model import mode_cost
+
+    return sum(
+        mode_cost(t, d, "ours",
+                  scheme=choose_scheme_cost_based(t, d, kappa)).total_s
+        for d in range(t.nmodes)
+    )
+
+
+def run(iters: int = 2):
+    rows = []
+    for name, t in load_datasets().items():
+        ta = total_cost(t, "ours", scheme=None)                       # adaptive
+        t1 = total_cost(t, "ours", scheme=Scheme.INDEX_PARTITION)     # s1 only
+        t2 = total_cost(t, "ours", scheme=Scheme.NNZ_PARTITION)      # s2 only
+        tc = _cost_policy_total(t)                                    # beyond-paper
+        m_ad = time_engine(t, engine_ours, iters=iters, scheme=None)
+        m_s1 = time_engine(t, engine_ours, iters=iters,
+                           scheme=Scheme.INDEX_PARTITION)
+        m_s2 = time_engine(t, engine_ours, iters=iters,
+                           scheme=Scheme.NNZ_PARTITION)
+        picks = [choose_scheme(t.shape[d], KAPPA).value
+                 for d in range(t.nmodes)]
+        rows.append({
+            "dataset": name,
+            "adaptive_model_s": ta,
+            "model_speedup_vs_s1": t1 / ta,
+            "model_speedup_vs_s2": t2 / ta,
+            "cost_policy_model_s": tc,
+            "cost_vs_adaptive": ta / tc,
+            "cpu_adaptive_s": m_ad["mttkrp_seconds"],
+            "cpu_s1_s": m_s1["mttkrp_seconds"],
+            "cpu_s2_s": m_s2["mttkrp_seconds"],
+            "picks": picks,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("name,us_per_call,derived")
+    g1, g2 = [], []
+    for r in rows:
+        print(f"fig4/{r['dataset']}/adaptive,{r['adaptive_model_s']*1e6:.0f},"
+              f"picks={r['picks']};model_speedup_vs_s1="
+              f"{r['model_speedup_vs_s1']:.2f}x;vs_s2="
+              f"{r['model_speedup_vs_s2']:.2f}x;"
+              f"cpu_s={r['cpu_adaptive_s']:.3f}")
+        g1.append(r["model_speedup_vs_s1"])
+        g2.append(r["model_speedup_vs_s2"])
+    print(f"fig4/geomean_model_speedup_vs_s1,"
+          f"{float(np.exp(np.mean(np.log(g1)))):.3f},paper=2.2x")
+    print(f"fig4/geomean_model_speedup_vs_s2,"
+          f"{float(np.exp(np.mean(np.log(g2)))):.3f},paper=1.3x")
+    gc = [r["cost_vs_adaptive"] for r in rows]
+    print(f"fig4/geomean_costpolicy_vs_adaptive,"
+          f"{float(np.exp(np.mean(np.log(gc)))):.3f},beyond-paper")
+
+
+if __name__ == "__main__":
+    main()

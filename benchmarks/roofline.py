@@ -1,0 +1,51 @@
+"""Roofline report generator: reads the dry-run JSON and renders the
+per-(arch x shape x mesh) table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"skip: {r['skipped'][:40]}… |")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"ERROR {r['error'][:40]} |")
+    t = r["roofline"]
+    return ("| {arch} | {shape} | {mesh} | {tc:.2e} | {tm:.2e} | {tl:.2e} | "
+            "{dom} | useful={ur} fits={fits} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        tc=t["t_compute_s"], tm=t["t_memory_s"], tl=t["t_collective_s"],
+        dom=t["dominant"],
+        ur=f"{r['useful_flop_ratio']:.2f}" if r.get("useful_flop_ratio") else "-",
+        fits="Y" if r.get("fits_hbm") else "N")
+
+
+def render(results: list[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | notes |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in results:
+        lines.append(fmt_row(r))
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json"
+    try:
+        with open(path) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        print(f"roofline/skipped,0,no dry-run results at {path} "
+              "(run python -m repro.launch.dryrun --all first)")
+        return
+    print(render(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Benchmark runner: one section per paper table/figure + kernel + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run``            — everything
+``PYTHONPATH=src python -m benchmarks.run fig3 fig5``  — a subset
+Output: ``name,us_per_call,derived`` CSV per section.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+
+    def on(name):
+        return not want or name in want
+
+    sections = []
+    if on("table3"):
+        from . import table3_datasets
+        sections.append(("table3 (dataset characteristics)", table3_datasets.main))
+    if on("fig3"):
+        from . import fig3_total_time
+        sections.append(("fig3 (total execution time vs baselines)", fig3_total_time.main))
+    if on("fig4"):
+        from . import fig4_load_balance
+        sections.append(("fig4 (adaptive load balancing ablation)", fig4_load_balance.main))
+    if on("fig5"):
+        from . import fig5_memory
+        sections.append(("fig5 (memory consumption)", fig5_memory.main))
+    if on("kernel"):
+        from . import kernel_bench
+        sections.append(("pallas kernel micro-bench", kernel_bench.main))
+    if on("roofline"):
+        from . import roofline
+        sections.append(("roofline table (from dry-run)", roofline.main))
+
+    for title, fn in sections:
+        print(f"\n===== {title} =====")
+        t0 = time.time()
+        fn()
+        print(f"===== done in {time.time()-t0:.1f}s =====")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+"""Generate EXPERIMENTS.md from collected results JSON."""
+import json
+
+BASE = json.load(open("results/dryrun_baseline.json"))
+try:
+    P1 = json.load(open("results/perf_iterations.json"))
+except FileNotFoundError:
+    P1 = []
+try:
+    P2 = json.load(open("results/perf_iterations2.json"))
+except FileNotFoundError:
+    P2 = []
+
+
+def cell(arch, shape, mesh="16x16", rows=BASE):
+    for r in rows:
+        if (r.get("arch"), r.get("shape"), r.get("mesh")) == (arch, shape, mesh):
+            return r
+    return None
+
+
+def row_md(r):
+    if "skipped" in r:
+        reason = ("needs sub-quadratic attention — pure full-attention arch"
+                  if "sub-quadratic" in r["skipped"] else r["skipped"][:50])
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | — "
+                f"| — | skip: {reason} |")
+    t = r["roofline"]
+    return ("| {a} | {s} | {m} | {tc:.2e} | {tm:.2e} | {tl:.2e} | {dom} | "
+            "{ur:.2f} | {fits} | {note} |").format(
+        a=r["arch"], s=r["shape"], m=r["mesh"], tc=t["t_compute_s"],
+        tm=t["t_memory_s"], tl=t["t_collective_s"], dom=t["dominant"],
+        ur=r["useful_flop_ratio"] or 0,
+        fits="Y" if r["fits_hbm"] else "N",
+        note=f"compile {r['compile_seconds']}s")
+
+
+def iter_row(r, base):
+    if "error" in r:
+        return f"| {r['iteration']} | ERROR {r['error'][:50]} | | | | |"
+    t, bt = r["roofline"], base["roofline"]
+    def cmp(a, b):
+        return f"{a:.3g} ({b/a:.1f}x)" if a and b else f"{a:.3g}"
+    return ("| {i} | {tc} | {tm} | {tl} | {bound} | fits={f}, state {st:.2e} |"
+            .format(i=r["iteration"],
+                    tc=cmp(t["t_compute_s"], bt["t_compute_s"]),
+                    tm=cmp(t["t_memory_s"], bt["t_memory_s"]),
+                    tl=cmp(t["t_collective_s"], bt["t_collective_s"]),
+                    bound=cmp(t["bound_step_s"], bt["bound_step_s"]),
+                    f="Y" if r["fits_hbm"] else "N",
+                    st=r["state_bytes_per_device"]))
+
+
+ok = [r for r in BASE if "skipped" not in r and "error" not in r]
+skips = [r for r in BASE if "skipped" in r]
+fails = [r for r in BASE if "error" in r]
+
+doc = []
+doc.append("""# EXPERIMENTS
+
+All numbers in this file are produced by code in this repository:
+`python -m repro.launch.dryrun --all` (dry-run/roofline),
+`python -m benchmarks.run` (paper figures), and
+`results/hillclimb*.py` (§Perf iterations).  Container is CPU-only; TPU
+v5e is the modeled target (197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI per chip).
+
+## §Paper-claims validation (the faithful reproduction)
+
+The paper evaluates pure kernel speedup on an RTX 3090.  This container
+has no GPU, so three instruments are used (benchmarks/):
+
+All six FROSTT datasets of Table III run (synthetic stand-ins with exact
+small-mode dimensions and power-law fiber skew; nnz scaled for CI).
+
+| claim (paper) | instrument | result |
+|---|---|---|
+| adaptive LB beats scheme-1-only, geomean 2.2x (Fig 4) | device cost model over measured partitionings | **2.17x** ✓ |
+| adaptive LB beats scheme-2-only, geomean 1.3x (Fig 4) | same | **1.10x** (direction ✓; gap analysed below) |
+| 7.9x vs ParTI-like naive COO (Fig 3) | same | **2.34x** (direction ✓) |
+| 8.9x vs MM-CSF-like (Fig 3) | same | **1.46x** (direction ✓) |
+| 2.4x vs BLCO-like (Fig 3) | same | **1.02x** (parity; see below) |
+| all tensor copies fit device memory (Fig 5) | analytic, full-scale FROSTT | ✓ all six datasets < 16 GB |
+| mode-specific format removes intermediate traffic | traffic model | 1.9–2.3x fewer bytes than naive COO ✓ |
+| >4-mode support (vs baselines' 4) | vast (5 modes) runs through all engines ✓ |
+
+Why the absolute Fig-3 gaps are smaller than published: the cost model
+prices only first-principles terms (traffic, imbalance, atomic
+throughput).  The published 8-9x additionally contains the baselines'
+implementation overheads (ParTI's semi-sparse intermediates and kernel
+launches, MM-CSF's per-mode re-sorts, BLCO's conflict-resolution pass),
+which we deliberately do not invent numbers for.  The scheme-2 gap
+(1.10x vs 1.3x): our scaled tensors put several modes just above
+I_d ~ kappa where the paper's threshold rule mispicks — fixed by the
+beyond-paper cost-based selector (§Perf, +1.17x geomean).
+
+CPU wall-clock of all four formats is also reported by
+`benchmarks.run fig3` for transparency; on a CPU (no SMs, no atomics, no
+L1-resident accumulators) the published ordering does not and should not
+reproduce — the device model is the comparable instrument.
+
+Correctness of the reproduction is pinned by tests: MTTKRP == dense
+matricization oracle across modes/backends/schemes (incl. the Pallas
+kernel in interpret mode), CPD-ALS fit -> 0.999 on fully-observed
+low-rank tensors, Graham 4/3 bound holds for greedy scheme-1, and the
+distributed shard_map engine equals the oracle for both schemes.
+""")
+
+doc.append(f"""## §Dry-run (multi-pod)
+
+Meshes: single-pod (data=16, model=16) = 256 chips; multi-pod
+(pod=2, data=16, model=16) = 512 chips.  Every (arch x shape x mesh)
+cell is `jit(step).lower(...).compile()`-proofed with explicit
+shardings; costs come from two small UNROLLED probe compiles
+extrapolated affinely in depth (scan bodies are counted once by XLA
+cost analysis — extrapolation validated against a fully-unrolled
+internvl2 compile: collective bytes exact, FLOPs within ~11%,
+conservative), plus an exact analytic correction for attention-chunk
+scans.  Memory is reported from (a) XLA memory_analysis (per device)
+and (b) exact sharded state bytes + an activation model.
+
+**Result: {len(ok)}/80 cells compile and shard cleanly; {len(skips)} cells are
+assignment-mandated skips (long_500k on pure full-attention archs);
+{len(fails)} failures.**
+
+Notable findings from the compiled HLO:
+* GSPMD emits an "involuntary full rematerialization" warning for
+  head-dim-sharded KV caches (contracting-dim sharding forces f32
+  resharding copies) — diagnosed and fixed in §Perf iteration A4 by
+  sequence-splitting the cache instead (flash-decoding layout).
+* A globally-sorted MoE dispatch destroys batch sharding (GSPMD
+  replicates expert GEMMs across the data axis; 5x FLOP inflation)
+  — fixed before baselining by per-row dispatch (see models/mlp.py).
+* decode_32k for qwen1.5-32b does not fit HBM at bf16 with batch-only
+  cache sharding (344 GB/chip) — driven to fit in §Perf.
+""")
+
+doc.append("## §Roofline (baseline, all cells)\n")
+doc.append("Terms are whole-step seconds per chip: compute = HLO_FLOPs /"
+           " 197e12, memory = HLO_bytes / 819e9, collective = modeled ring"
+           " wire bytes / 50e9.  `useful` = MODEL_FLOPS (6·N·D train /"
+           " 2·N_active·D inference) / HLO_FLOPs.\n")
+doc.append("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | fits | notes |")
+doc.append("|---|---|---|---|---|---|---|---|---|---|")
+for r in BASE:
+    doc.append(row_md(r))
+
+doc.append("""
+Reading the table:
+* **Every cell is memory-term dominated.**  Two causes: (i) XLA-CPU
+  "bytes accessed" counts unfused op traffic (a TPU backend fuses
+  elementwise chains into matmuls; the true memory term is lower), so
+  the memory column is an upper bound; (ii) several cells have real
+  memory pathologies that §Perf removes (f32 upcasts of whole KV caches,
+  MoE dispatch buffers, unchunked f32 logits).
+* `useful` ~ 0.75-0.80 for dense train cells is expected: remat=full
+  re-executes the forward (8·N·D/6·N·D = 0.75) and causal attention is
+  computed as full rectangles (2x) — both are explicit engineering
+  choices visible to the model.
+* decode cells have tiny useful ratios because decode FLOPs are
+  dominated by attention over the cache (not in 2·N·D) plus dequant /
+  cache-update traffic: decode is bandwidth-bound, as on real hardware.
+* MoE archs: granite's fine-grained experts (d_ff=512) make dispatch
+  traffic dominate (useful 0.22-0.41) — the paper-technique-representative
+  pathology that §Perf attacks (its dispatch IS a scheme-2-style sparse
+  mode contraction).
+* whisper/hymba prefill carry the largest collective terms
+  (TP all-reduces of (B,S,d) per layer + GSPMD reshards).
+""")
+
+perf_cells = [
+    ("A", "qwen1.5-32b", "decode_32k",
+     "worst roofline fraction; does not fit HBM at baseline"),
+    ("B", "hymba-1.5b", "prefill_32k",
+     "most collective-bound cell (t_coll/t_mem = 0.65)"),
+    ("C", "granite-moe-1b-a400m", "train_4k",
+     "paper-technique representative: fine-grained sparse dispatch"),
+]
+doc.append("""## §Perf (hillclimb: hypothesis -> change -> measure -> verdict)
+
+Three cells selected per the assignment (worst fraction / most
+collective-bound / most paper-representative), iterated until <5% gains.
+Baselines = the §Roofline table above.  Ratios in parentheses are
+improvement vs that cell's baseline.
+""")
+for tag, arch, shape, why in perf_cells:
+    b = cell(arch, shape)
+    doc.append(f"### Cell {tag}: {arch} x {shape} x 16x16 — {why}\n")
+    doc.append("| iter | compute s | memory s | collective s | bound step s | state |")
+    doc.append("|---|---|---|---|---|---|")
+    t = b["roofline"]
+    doc.append(f"| base | {t['t_compute_s']:.3g} | {t['t_memory_s']:.3g} | "
+               f"{t['t_collective_s']:.3g} | {t['bound_step_s']:.3g} | "
+               f"fits={'Y' if b['fits_hbm'] else 'N'}, state "
+               f"{b['state_bytes_per_device']:.2e} |")
+    for r in P1 + P2:
+        if r.get("arch") == arch and r.get("shape") == shape:
+            doc.append(iter_row(r, b))
+    doc.append("")
+
+doc.append(open("results/perf_narrative.md").read()
+           if __import__("os").path.exists("results/perf_narrative.md") else "")
+
+with open("EXPERIMENTS.md", "w") as f:
+    f.write("\n".join(doc))
+print("wrote EXPERIMENTS.md", len("\n".join(doc)), "chars")

@@ -1,0 +1,56 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, traceback
+from repro.launch.dryrun import run_cell
+
+ITERS = [
+    # Cell A: qwen1.5-32b decode_32k (worst roofline fraction / doesn't fit)
+    ("A1", "qwen1.5-32b", "decode_32k", dict(
+        kv_model_axis=True,
+        extra_rules=dict(kv_heads="model", kv_hd="model"))),
+    ("A2", "qwen1.5-32b", "decode_32k", dict(
+        kv_model_axis=True, quant_kv=True,
+        extra_rules=dict(kv_heads="model", kv_hd="model"))),
+    ("A3", "qwen1.5-32b", "decode_32k", dict(
+        kv_model_axis=True, quant_kv=True,
+        extra_rules=dict(kv_heads="model", kv_hd="model"),
+        overrides=dict(attn_bf16_dot=True))),
+    # Cell B: hymba-1.5b prefill_32k (most collective-bound)
+    ("B1", "hymba-1.5b", "prefill_32k", dict(
+        extra_rules=dict(fsdp=("data", "model"), tensor=None,
+                         experts=None, vocab=None))),
+    ("B2", "hymba-1.5b", "prefill_32k", dict(
+        extra_rules=dict(fsdp=("data", "model"), tensor=None,
+                         experts=None, vocab=None),
+        overrides=dict(attn_bf16_dot=True))),
+    # Cell C: granite-moe train_4k (dispatch-bound fine-grained MoE —
+    # the paper-technique-representative sparse-dispatch cell)
+    ("C1", "granite-moe-1b-a400m", "train_4k", dict(
+        overrides=dict(moe_dense_eval=True))),
+    ("C2", "granite-moe-1b-a400m", "train_4k", dict(
+        overrides=dict(moe_dense_eval=True, loss_chunk=1024))),
+    ("C3", "granite-moe-1b-a400m", "train_4k", dict(
+        overrides=dict(moe_dense_eval=True, loss_chunk=1024,
+                       attn_bf16_dot=True))),
+]
+
+out = []
+for tag, arch, shape, kw in ITERS:
+    try:
+        r = run_cell(arch, shape, multi_pod=False, **kw)
+        r["iteration"] = tag
+        t = r["roofline"]
+        print(f"[{tag}] {arch} {shape}: tc={t['t_compute_s']:.3e} "
+              f"tm={t['t_memory_s']:.3e} tl={t['t_collective_s']:.3e} "
+              f"dom={t['dominant']} fits={r['fits_hbm']} "
+              f"state={r['state_bytes_per_device']:.3e} "
+              f"mfu_ub={r['mfu_upper_bound']:.4f}", flush=True)
+    except Exception as e:
+        r = {"iteration": tag, "arch": arch, "shape": shape,
+             "error": f"{type(e).__name__}: {e}",
+             "traceback": traceback.format_exc()[-1500:]}
+        print(f"[{tag}] FAIL: {r['error']}", flush=True)
+    out.append(r)
+    with open("results/perf_iterations.json", "w") as f:
+        json.dump(out, f, indent=1)
+print("DONE")

@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, traceback
+from repro.launch.dryrun import run_cell
+
+ITERS = [
+    # A4: flash-decoding seq-split cache (bf16), rules: seq->model
+    ("A4", "qwen1.5-32b", "decode_32k", dict(
+        kv_seq_model=True,
+        extra_rules=dict(seq="model"),
+        overrides=dict(attn_bf16_dot=True))),
+    # A5: + int8 cache
+    ("A5", "qwen1.5-32b", "decode_32k", dict(
+        kv_seq_model=True, quant_kv=True,
+        extra_rules=dict(seq="model"),
+        overrides=dict(attn_bf16_dot=True))),
+    # B3: Megatron-SP residual stream (keep TP), bf16 dots
+    ("B3", "hymba-1.5b", "prefill_32k", dict(
+        extra_rules=dict(seq_act="model"),
+        overrides=dict(attn_bf16_dot=True))),
+    # B4: SP + bf16 on the baseline TP WITHOUT bf16 flag, to isolate SP
+    ("B4", "hymba-1.5b", "prefill_32k", dict(
+        extra_rules=dict(seq_act="model"))),
+    # C4: dense-eval + chunked CE + Megatron-SP residual
+    ("C4", "granite-moe-1b-a400m", "train_4k", dict(
+        extra_rules=dict(seq_act="model"),
+        overrides=dict(moe_dense_eval=True, loss_chunk=1024))),
+]
+out = []
+for tag, arch, shape, kw in ITERS:
+    try:
+        r = run_cell(arch, shape, multi_pod=False, **kw)
+        r["iteration"] = tag
+        t = r["roofline"]
+        print(f"[{tag}] {arch} {shape}: tc={t['t_compute_s']:.3e} "
+              f"tm={t['t_memory_s']:.3e} tl={t['t_collective_s']:.3e} "
+              f"dom={t['dominant']} fits={r['fits_hbm']} "
+              f"state={r['state_bytes_per_device']:.3e} "
+              f"mfu_ub={r['mfu_upper_bound']:.4f}", flush=True)
+    except Exception as e:
+        r = {"iteration": tag, "arch": arch, "shape": shape,
+             "error": f"{type(e).__name__}: {e}",
+             "traceback": traceback.format_exc()[-1500:]}
+        print(f"[{tag}] FAIL: {r['error']}", flush=True)
+    out.append(r)
+    with open("results/perf_iterations2.json", "w") as f:
+        json.dump(out, f, indent=1)
+print("DONE")

@@ -1,0 +1,30 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, traceback
+from repro.launch.dryrun import run_cell
+ITERS = [
+    ("C5", "granite-moe-1b-a400m", "train_4k", dict(
+        extra_rules=dict(seq_act="model"),
+        overrides=dict(moe_dense_eval=True, loss_chunk=1024, remat="dots"))),
+    ("C6", "granite-moe-1b-a400m", "train_4k", dict(
+        extra_rules=dict(seq_act="model"),
+        overrides=dict(moe_dense_eval=True, loss_chunk=1024, remat="none"))),
+]
+out = []
+for tag, arch, shape, kw in ITERS:
+    try:
+        r = run_cell(arch, shape, multi_pod=False, **kw)
+        r["iteration"] = tag
+        t = r["roofline"]
+        print(f"[{tag}] {arch} {shape}: tc={t['t_compute_s']:.3e} "
+              f"tm={t['t_memory_s']:.3e} tl={t['t_collective_s']:.3e} "
+              f"fits={r['fits_hbm']} state={r['state_bytes_per_device']:.3e} "
+              f"act={r['activation_bytes_per_device_est']:.3e} "
+              f"mfu_ub={r['mfu_upper_bound']:.4f}", flush=True)
+    except Exception as e:
+        r = {"iteration": tag, "arch": arch, "shape": shape,
+             "error": f"{type(e).__name__}: {e}"}
+        print(f"[{tag}] FAIL: {r['error']}", flush=True)
+    out.append(r)
+    json.dump(out, open("results/perf_iterations3.json", "w"), indent=1)
+print("DONE")

@@ -1,0 +1,169 @@
+"""Fault-tolerant checkpointing: atomic, versioned, async-capable,
+reshard-on-restore.
+
+Layout:  <dir>/step_<N>/
+            meta.msgpack        tree structure + shapes + dtypes + extras
+            arrays.npz          flattened leaves (host numpy)
+         <dir>/step_<N>.done    commit marker (atomic rename)
+
+Guarantees:
+  * atomicity — a checkpoint is visible only after its .done marker is
+    renamed into place; torn writes are never restored.
+  * keep-k GC of committed checkpoints; torn ones are pruned on start.
+  * restore-to-different-topology (elastic): arrays are loaded on host
+    and device_put against the *target* shardings, so a 512-chip
+    checkpoint restores onto 256 chips (or 8 CPU test devices) unchanged.
+  * async save: the device->host pull happens synchronously (cheap), the
+    file write runs on a worker thread so the train loop is not blocked.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+             for p, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = str(directory)
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(self.dir, exist_ok=True)
+        self._prune_torn()
+
+    # -- discovery ----------------------------------------------------------
+
+    def _steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)\.done", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self._steps()
+        return steps[-1] if steps else None
+
+    def _prune_torn(self):
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and not os.path.exists(
+                    os.path.join(self.dir, f"{name}.done")):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None,
+             block: bool = False):
+        """Snapshot ``tree`` (params/opt state/pipeline...) at ``step``."""
+        self.wait()  # one in-flight save at a time
+        paths, leaves, _ = _flatten_with_paths(tree)
+        host = [np.asarray(x) for x in leaves]   # device -> host, sync
+        meta = {
+            "step": step,
+            "paths": paths,
+            "shapes": [list(a.shape) for a in host],
+            "dtypes": [str(a.dtype) for a in host],
+            "extra": extra or {},
+            "time": time.time(),
+        }
+
+        def _write():
+            tmp = os.path.join(self.dir, f".tmp_step_{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            shutil.rmtree(tmp, ignore_errors=True)
+            os.makedirs(tmp)
+            with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+                f.write(msgpack.packb(meta))
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": a for i, a in enumerate(host)})
+            shutil.rmtree(final, ignore_errors=True)
+            os.rename(tmp, final)
+            # commit marker: atomic rename
+            marker_tmp = os.path.join(self.dir, f".tmp_step_{step}.done")
+            with open(marker_tmp, "w") as f:
+                f.write("ok")
+            os.rename(marker_tmp, os.path.join(self.dir, f"step_{step}.done"))
+            self._gc()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+        else:
+            _write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self._steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s}.done"))
+            except OSError:
+                pass
+
+    # -- restore --------------------------------------------------------------
+
+    def restore(self, step: int | None = None, *, template: Any = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Load checkpoint ``step`` (default latest).
+
+        template: pytree giving the target structure (required).
+        shardings: optional matching pytree of NamedShardings — arrays are
+          device_put against them (elastic restore onto any topology).
+        Returns (tree, extra)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        base = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(base, "meta.msgpack"), "rb") as f:
+            meta = msgpack.unpackb(f.read())
+        data = np.load(os.path.join(base, "arrays.npz"))
+        host = [data[f"a{i}"] for i in range(len(meta["paths"]))]
+
+        if template is None:
+            raise ValueError("restore requires a template pytree")
+        t_paths, t_leaves, treedef = _flatten_with_paths(template)
+        if t_paths != meta["paths"]:
+            missing = set(meta["paths"]) ^ set(t_paths)
+            raise ValueError(
+                f"checkpoint/template structure mismatch; differing: "
+                f"{sorted(missing)[:5]}...")
+        for a, t in zip(host, t_leaves):
+            if tuple(a.shape) != tuple(t.shape):
+                raise ValueError(
+                    f"shape mismatch {a.shape} vs {t.shape} on restore")
+
+        if shardings is not None:
+            s_leaves = jax.tree.leaves(
+                shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            out = [jax.device_put(a.astype(t.dtype), s)
+                   for a, t, s in zip(host, t_leaves, s_leaves)]
+        else:
+            out = [jax.device_put(a.astype(t.dtype)) for a, t in
+                   zip(host, t_leaves)]
+        return jax.tree.unflatten(treedef, out), meta.get("extra", {})

@@ -1,0 +1,4 @@
+from .pipeline import PipelineState, TokenPipeline
+from .tns import read_tns, write_tns
+
+__all__ = ["PipelineState", "TokenPipeline", "read_tns", "write_tns"]

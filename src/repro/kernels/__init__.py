@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (spMTTKRP).
+
+mttkrp_pallas.py — pl.pallas_call kernel: slab-packed segmented MTTKRP
+                   with one-hot MXU gather/scatter and BlockSpec VMEM
+                   tiling (scalar-prefetched output-block schedule).
+ops.py           — host-side slab packing, jit wrappers, BlockSpec
+                   auto-tuning (beyond-paper).
+ref.py           — pure-jnp oracles (dense matricization / COO /
+                   sorted-segment formulations).
+"""
+from .mttkrp_pallas import mttkrp_pallas
+from .ops import (DEFAULT_BLOCK_ROWS, DEFAULT_TILE, PackedModeLayout,
+                  auto_tiles, estimate_pack_cost, mttkrp_packed,
+                  mttkrp_packed_ref, pack_layout, pack_slabs)
+
+__all__ = [
+    "mttkrp_pallas", "DEFAULT_BLOCK_ROWS", "DEFAULT_TILE",
+    "PackedModeLayout", "auto_tiles", "estimate_pack_cost",
+    "mttkrp_packed", "mttkrp_packed_ref", "pack_layout", "pack_slabs",
+]

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel for sorted segmented spMTTKRP.
+
+TPU-native re-think of the paper's R x P thread-block kernel (§IV-B):
+
+  * The mode-specific layout pre-sorts nonzeros by (relabeled) output row,
+    so the scatter-update becomes a *segmented reduction* — no atomics
+    (TPU has none; the paper's Local_Update/Global_Update dichotomy moves
+    to the partitioning level, see core/distributed.py).
+  * Nonzeros are packed into fixed ``tile``-sized slabs grouped under
+    ``block_rows``-sized output row blocks (see ops.pack_slabs).  Grid =
+    one step per slab; consecutive slabs of the same row block revisit the
+    same output block, which therefore stays resident in VMEM and is only
+    written back to HBM once per row block — this is the paper's
+    "eliminate intermediate-value traffic" property, realized through the
+    Pallas pipeline instead of L1 atomics.
+  * Factor-row gathers and the final scatter-reduce both become one-hot
+    matmuls on the MXU when the index space is small (`onehot`), else
+    vector gathers (`take`).  The Hadamard accumulator ``l`` (paper's
+    l(r)) lives in VREGs/VMEM for its whole life.
+
+Block layout (VMEM, per grid step):
+  idx_ref   : (W, T)  int32   input-mode indices (lane dim = T)
+  val_ref   : (1, T)  float   nonzero values
+  lrow_ref  : (1, T)  int32   output row local to this row block
+  factors   : (I_w, R) each   full factor matrices, VMEM-resident
+                              (small-tensor regime, paper §II-A.4)
+  out_ref   : (BR, R) float32 one output row block, revisited across slabs
+
+Scalar-prefetch:
+  rb_of (G,) int32  output row-block id per grid step (drives out index_map)
+  first (G,) int32  1 on the first slab of each row block (zero-init gate)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    rb_of_ref,
+    first_ref,
+    idx_ref,
+    val_ref,
+    lrow_ref,
+    *refs,
+    num_inputs: int,
+    block_rows: int,
+    tile: int,
+    gather_onehot_max: int,
+):
+    factor_refs = refs[:num_inputs]
+    out_ref = refs[num_inputs]
+    g = pl.program_id(0)
+
+    @pl.when(first_ref[g] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = val_ref[0, :].astype(jnp.float32)          # (T,)
+    prod = vals[:, None]                              # (T, 1) -> bcast to (T, R)
+    for w in range(num_inputs):
+        fac = factor_refs[w]
+        idx_w = idx_ref[w, :]                         # (T,)
+        I_w = fac.shape[0]
+        if I_w <= gather_onehot_max:
+            # Gather as a one-hot matmul: MXU-friendly, no random access.
+            iota = lax.broadcasted_iota(jnp.int32, (tile, I_w), 1)
+            onehot = (idx_w[:, None] == iota).astype(jnp.float32)
+            fw = jnp.dot(
+                onehot, fac[...].astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            # Vector gather from the VMEM-resident factor matrix.
+            fw = jnp.take(fac[...], idx_w, axis=0).astype(jnp.float32)
+        prod = prod * fw                              # Hadamard accumulate (VREG)
+
+    # Segmented reduce into the row block: one-hot^T @ prod on the MXU.
+    lrow = lrow_ref[0, :]                             # (T,)
+    iota_r = lax.broadcasted_iota(jnp.int32, (tile, block_rows), 1)
+    scatter = (lrow[:, None] == iota_r).astype(jnp.float32)   # (T, BR)
+    out_ref[...] += jnp.dot(
+        scatter.T, prod, preferred_element_type=jnp.float32
+    )
+
+
+def mttkrp_pallas(
+    rb_of: jnp.ndarray,          # (G,) int32
+    first: jnp.ndarray,          # (G,) int32
+    idx_packed: jnp.ndarray,     # (W, G*T) int32
+    vals_packed: jnp.ndarray,    # (1, G*T) float
+    lrows_packed: jnp.ndarray,   # (1, G*T) int32
+    factors: Sequence[jnp.ndarray],  # W arrays (I_w, R)
+    *,
+    num_row_blocks: int,
+    block_rows: int,
+    tile: int,
+    interpret: bool = True,
+    gather_onehot_max: int = 2048,
+) -> jnp.ndarray:
+    """Run the segmented MTTKRP kernel. Returns (num_row_blocks*block_rows, R) f32."""
+    W = idx_packed.shape[0]
+    if W != len(factors):
+        raise ValueError(f"{W} index rows but {len(factors)} input factors")
+    G = rb_of.shape[0]
+    if idx_packed.shape[1] != G * tile:
+        raise ValueError("packed arrays must have G*tile columns")
+    R = factors[0].shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(G,),
+        in_specs=[
+            pl.BlockSpec((W, tile), lambda g, rb, fi: (0, g)),
+            pl.BlockSpec((1, tile), lambda g, rb, fi: (0, g)),
+            pl.BlockSpec((1, tile), lambda g, rb, fi: (0, g)),
+        ]
+        + [
+            pl.BlockSpec(f.shape, lambda g, rb, fi: (0, 0))
+            for f in factors
+        ],
+        out_specs=pl.BlockSpec(
+            (block_rows, R), lambda g, rb, fi: (rb[g], 0)
+        ),
+    )
+    kernel = functools.partial(
+        _kernel,
+        num_inputs=W,
+        block_rows=block_rows,
+        tile=tile,
+        gather_onehot_max=gather_onehot_max,
+    )
+    out_shape = jax.ShapeDtypeStruct(
+        (num_row_blocks * block_rows, R), jnp.float32
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rb_of, first, idx_packed, vals_packed, lrows_packed, *factors)

@@ -1,0 +1,238 @@
+"""Jit'd wrappers + host-side slab packing for the Pallas MTTKRP kernel.
+
+``pack_slabs`` converts a row-sorted mode layout into the fixed-shape slab
+arrays the kernel consumes.  Packing is one-time host preprocessing per
+mode copy (amortized over all ALS iterations), mirroring the paper's
+format-construction stage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as ref_mod
+from .mttkrp_pallas import mttkrp_pallas
+
+DEFAULT_TILE = 256
+DEFAULT_BLOCK_ROWS = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedModeLayout:
+    """Device-ready slab packing of one mode layout (or one partition of it).
+
+    Shapes: G grid steps, T = tile nonzeros per slab, W input modes.
+    """
+
+    mode: int
+    num_rows: int              # relabeled rows covered (<= num_row_blocks*BR)
+    num_row_blocks: int
+    block_rows: int
+    tile: int
+    rb_of: np.ndarray          # (G,) int32
+    first: np.ndarray          # (G,) int32
+    idx_packed: np.ndarray     # (W, G*T) int32
+    vals_packed: np.ndarray    # (1, G*T) float32
+    lrows_packed: np.ndarray   # (1, G*T) int32
+    input_modes: tuple[int, ...]
+    pad_fraction: float        # padding overhead (diagnostic)
+
+    @property
+    def num_slabs(self) -> int:
+        return int(self.rb_of.shape[0])
+
+
+def pack_slabs(
+    input_indices: np.ndarray,   # (nnz, W) int32 — input-mode columns only
+    rows: np.ndarray,            # (nnz,) int32 — relabeled rows, sorted
+    values: np.ndarray,          # (nnz,)
+    num_rows: int,
+    *,
+    mode: int = 0,
+    input_modes: Sequence[int] = (),
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    tile: int = DEFAULT_TILE,
+) -> PackedModeLayout:
+    """Pack row-sorted COO data into per-row-block slabs of ``tile`` nonzeros.
+
+    Every row block gets >= 1 slab (empty blocks get one all-padding slab so
+    their output block is zero-initialized).  Padding entries carry value 0
+    and indices 0, contributing nothing.
+    """
+    nnz = len(values)
+    if nnz and not bool(np.all(rows[:-1] <= rows[1:])):
+        raise ValueError("rows must be sorted (build via core.layout)")
+    W = input_indices.shape[1]
+    nb = max(1, -(-num_rows // block_rows))
+    row_ptr = np.zeros(num_rows + 1, dtype=np.int64)
+    np.cumsum(np.bincount(rows, minlength=num_rows), out=row_ptr[1:])
+    starts = row_ptr[np.minimum(np.arange(nb) * block_rows, num_rows)]
+    ends = row_ptr[np.minimum((np.arange(nb) + 1) * block_rows, num_rows)]
+    lens = ends - starts
+    slabs_per_block = np.maximum(1, -(-lens // tile))
+    G = int(slabs_per_block.sum())
+
+    slab_block = np.repeat(np.arange(nb, dtype=np.int64), slabs_per_block)
+    # Rank of each slab within its block.
+    block_start_slab = np.zeros(nb, dtype=np.int64)
+    np.cumsum(slabs_per_block[:-1], out=block_start_slab[1:])
+    rank = np.arange(G, dtype=np.int64) - block_start_slab[slab_block]
+
+    src_start = starts[slab_block] + rank * tile
+    length = np.clip(ends[slab_block] - src_start, 0, tile)
+    src = src_start[:, None] + np.arange(tile, dtype=np.int64)[None, :]
+    valid = np.arange(tile)[None, :] < length[:, None]
+    src_c = np.minimum(src, max(nnz - 1, 0))
+
+    if nnz:
+        vals_p = np.where(valid, values[src_c], 0).astype(np.float32)
+        idx_p = np.where(valid[:, :, None], input_indices[src_c], 0)
+        lrow_p = np.where(
+            valid, rows[src_c] - slab_block[:, None] * block_rows, 0
+        )
+    else:
+        vals_p = np.zeros((G, tile), np.float32)
+        idx_p = np.zeros((G, tile, W), np.int32)
+        lrow_p = np.zeros((G, tile), np.int64)
+
+    pad = 1.0 - (nnz / float(G * tile)) if G else 0.0
+    return PackedModeLayout(
+        mode=mode,
+        num_rows=num_rows,
+        num_row_blocks=nb,
+        block_rows=block_rows,
+        tile=tile,
+        rb_of=slab_block.astype(np.int32),
+        first=(rank == 0).astype(np.int32),
+        idx_packed=np.ascontiguousarray(
+            idx_p.reshape(G * tile, W).T.astype(np.int32)
+        ),
+        vals_packed=vals_p.reshape(1, G * tile),
+        lrows_packed=lrow_p.reshape(1, G * tile).astype(np.int32),
+        input_modes=tuple(input_modes) or tuple(range(W)),
+        pad_fraction=float(pad),
+    )
+
+
+def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS, tile: int = DEFAULT_TILE) -> PackedModeLayout:
+    """Pack a ``core.layout.ModeLayout`` for kernel execution."""
+    in_modes = layout.input_modes()
+    return pack_slabs(
+        layout.indices[:, in_modes],
+        layout.rows,
+        layout.values,
+        layout.num_rows,
+        mode=layout.mode,
+        input_modes=in_modes,
+        block_rows=block_rows,
+        tile=tile,
+    )
+
+
+# -- beyond-paper: BlockSpec auto-tuning -------------------------------------
+
+_MXU_DIM = 128
+_VMEM_BYTES = 16 * 2**20
+_STEP_OVERHEAD_SLOTS = 192   # pipeline bubble per grid step, in slot units
+
+
+def tile_candidates():
+    return [(br, t) for br in (8, 32, 128, 256) for t in (64, 128, 256, 512)]
+
+
+def estimate_pack_cost(layout, block_rows: int, tile: int, rank: int,
+                       factor_rows: int) -> dict:
+    """Closed-form kernel cost for a (block_rows, tile) choice — no packing.
+
+    slots      = sum over row blocks of ceil(len/tile)*tile  (incl. padding)
+    mxu_factor = cost of the (tile x block_rows) scatter matmul relative to
+                 a lane-saturated tile (block_rows < 128 wastes MXU columns;
+                 block_rows > 128 adds proportional work)
+    vmem       = slabs + out block + resident factors; must fit 16 MiB
+    """
+    nb = max(1, -(-layout.num_rows // block_rows))
+    row_ptr = layout.row_ptr
+    import numpy as _np
+
+    starts = row_ptr[_np.minimum(_np.arange(nb) * block_rows, layout.num_rows)]
+    ends = row_ptr[_np.minimum((_np.arange(nb) + 1) * block_rows,
+                               layout.num_rows)]
+    slabs = _np.maximum(1, -(-(ends - starts) // tile))
+    G = int(slabs.sum())
+    slots = G * tile
+    pad = 1.0 - layout.nnz / max(slots, 1)
+    mxu_factor = max(block_rows, _MXU_DIM) / _MXU_DIM
+    W = layout.nmodes - 1
+    vmem = (W + 2) * tile * 4 + block_rows * rank * 4 + factor_rows * rank * 4
+    cost = slots * mxu_factor + G * _STEP_OVERHEAD_SLOTS
+    return {"block_rows": block_rows, "tile": tile, "grid": G,
+            "pad_fraction": pad, "vmem": int(vmem),
+            "vmem_ok": vmem <= _VMEM_BYTES, "cost": float(cost)}
+
+
+def auto_tiles(layout, rank: int = 32, factor_rows: int | None = None):
+    """Pick (block_rows, tile) minimizing the modeled kernel cost under the
+    VMEM budget.  The default (128, 256) is good for dense-ish modes; skewed
+    or tiny modes prefer smaller row blocks (less slab padding)."""
+    if factor_rows is None:
+        factor_rows = sum(layout.shape[w] for w in layout.input_modes())
+    best = None
+    for br, t in tile_candidates():
+        c = estimate_pack_cost(layout, br, t, rank, factor_rows)
+        if not c["vmem_ok"]:
+            continue
+        if best is None or c["cost"] < best["cost"]:
+            best = c
+    if best is None:   # factors overflow VMEM: caller must block factors
+        best = estimate_pack_cost(layout, DEFAULT_BLOCK_ROWS, DEFAULT_TILE,
+                                  rank, factor_rows)
+    return best["block_rows"], best["tile"]
+
+
+def mttkrp_packed(
+    packed: PackedModeLayout,
+    factors: Sequence[jnp.ndarray],
+    *,
+    interpret: bool = True,
+    gather_onehot_max: int = 2048,
+) -> jnp.ndarray:
+    """Run the Pallas kernel on a packed layout.  ``factors`` are the input
+    factor matrices in ``packed.input_modes`` order.  Returns the relabeled
+    (num_rows, R) f32 output (trailing padding rows stripped)."""
+    out = mttkrp_pallas(
+        jnp.asarray(packed.rb_of),
+        jnp.asarray(packed.first),
+        jnp.asarray(packed.idx_packed),
+        jnp.asarray(packed.vals_packed),
+        jnp.asarray(packed.lrows_packed),
+        [jnp.asarray(f) for f in factors],
+        num_row_blocks=packed.num_row_blocks,
+        block_rows=packed.block_rows,
+        tile=packed.tile,
+        interpret=interpret,
+        gather_onehot_max=gather_onehot_max,
+    )
+    return out[: packed.num_rows]
+
+
+def mttkrp_packed_ref(
+    packed: PackedModeLayout, factors: Sequence[jnp.ndarray]
+) -> jnp.ndarray:
+    """jnp oracle evaluated on the *packed* arrays (padding included) —
+    bit-for-bit the same data the kernel sees."""
+    idx = jnp.asarray(packed.idx_packed).T            # (G*T, W)
+    vals = jnp.asarray(packed.vals_packed)[0]
+    # Reconstruct absolute relabeled rows from block-local ones.
+    lrows = jnp.asarray(packed.lrows_packed)[0]
+    rb = jnp.repeat(jnp.asarray(packed.rb_of), packed.tile)
+    rows = lrows + rb * packed.block_rows
+    out = ref_mod.mttkrp_sorted_segments(
+        idx, rows, vals, [jnp.asarray(f) for f in factors],
+        packed.num_row_blocks * packed.block_rows,
+    )
+    return out[: packed.num_rows]

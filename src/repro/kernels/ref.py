@@ -1,0 +1,70 @@
+"""Pure-jnp / numpy oracles for spMTTKRP.
+
+Three reference levels, used to cross-validate each other and the Pallas
+kernel:
+
+  * ``mttkrp_dense``      — numpy, literal Eq.(1): X_(d) @ KRP(factors).
+                            Only for tiny test tensors.
+  * ``mttkrp_coo``        — jnp, elementwise COO formulation (Fig. 1 of the
+                            paper) with a materialized (nnz, R) Khatri-Rao
+                            intermediate + segment_sum.  This is also the
+                            "naive / ParTI-like" baseline in benchmarks.
+  * ``mttkrp_sorted_segments`` — jnp, the layout-aware formulation the
+                            Pallas kernel implements (rows pre-sorted, so
+                            segment_sum can assert sortedness).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def khatri_rao(mats: list[np.ndarray]) -> np.ndarray:
+    """Column-wise Khatri-Rao product, row-major sweep (lowest mode fastest
+    to match ``SparseTensor.matricize`` column ordering)."""
+    out = mats[0]
+    for m in mats[1:]:
+        # (I, R) x (J, R) -> (I*J, R) with J varying fastest.
+        out = (out[:, None, :] * m[None, :, :]).reshape(-1, out.shape[1])
+    return out
+
+
+def mttkrp_dense(tensor, factors: list[np.ndarray], mode: int) -> np.ndarray:
+    """Numpy dense oracle: X_(d) @ (KRP of input factors)."""
+    others = [factors[w] for w in range(len(factors)) if w != mode]
+    return tensor.matricize(mode) @ khatri_rao(others)
+
+
+def mttkrp_coo(
+    indices: jnp.ndarray,
+    values: jnp.ndarray,
+    factors: list[jnp.ndarray],
+    mode: int,
+    num_rows: int,
+) -> jnp.ndarray:
+    """Elementwise COO MTTKRP (unsorted; materializes the (nnz, R) Hadamard
+    intermediate — the traffic the paper's fused kernel avoids)."""
+    acc = values[:, None].astype(jnp.float32)
+    for w in range(len(factors)):
+        if w == mode:
+            continue
+        acc = acc * jnp.take(factors[w], indices[:, w], axis=0).astype(jnp.float32)
+    return jax.ops.segment_sum(acc, indices[:, mode], num_segments=num_rows)
+
+
+def mttkrp_sorted_segments(
+    input_indices: jnp.ndarray,   # (nnz, W) int32, input-mode columns only
+    rows: jnp.ndarray,            # (nnz,) int32 relabeled output rows, sorted
+    values: jnp.ndarray,          # (nnz,)
+    factors: list[jnp.ndarray],   # W input factor matrices (I_w, R)
+    num_rows: int,
+) -> jnp.ndarray:
+    """Layout-aware oracle: same math as the Pallas kernel, f32 accumulate."""
+    acc = values[:, None].astype(jnp.float32)
+    for w, fac in enumerate(factors):
+        acc = acc * jnp.take(fac, input_indices[:, w], axis=0).astype(jnp.float32)
+    return jax.ops.segment_sum(
+        acc, rows, num_segments=num_rows, indices_are_sorted=True
+    )

@@ -1,0 +1,367 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  512 placeholder host devices let jax.make_mesh
+# build the production meshes; nothing is ever allocated (AOT lowering
+# uses ShapeDtypeStructs only).
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape x mesh) cell:
+
+  1. PROOF compile: the full-depth model (layers scanned) is
+     jit(step).lower(**abstract_inputs).compile() — this is the
+     deliverable showing the sharding config is coherent at 256/512
+     chips.  memory_analysis() is read from this executable.
+
+  2. COST probes: XLA's cost_analysis counts a lax.scan body ONCE, so HLO
+     FLOPs/bytes/collectives are measured from two small UNROLLED compiles
+     (L1, L2 layers) and extrapolated affinely in L — exact for
+     layer-homogeneous stacks (validated against a fully-unrolled compile
+     in EXPERIMENTS.md §Dry-run).
+
+Usage:
+  python -m repro.launch.dryrun --arch dbrx-132b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import ARCHS, get_config
+from repro.launch import shardings as shd
+from repro.launch import steps as steps_mod
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+from repro.launch.mesh import HW, make_production_mesh
+from repro.models import SHAPES, get_model, shape_applicable, token_specs
+from repro.models import common as mcommon
+
+
+def _sharded_nbytes(tree, shardings) -> int:
+    """Per-device bytes of a pytree under the given shardings."""
+    total = 0
+    for arr, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = int(np.prod(arr.shape)) if arr.shape else 1
+        n_shards = 1
+        if isinstance(sh, NamedSharding):
+            axes = dict(zip(sh.mesh.axis_names, sh.mesh.devices.shape))
+            for dim_spec in sh.spec:
+                if dim_spec is None:
+                    continue
+                for a in ((dim_spec,) if isinstance(dim_spec, str) else dim_spec):
+                    n_shards *= axes[a]
+        total += n * arr.dtype.itemsize // max(n_shards, 1)
+    return total
+
+
+def _with_layers(cfg, L: int):
+    """Config with depth L, keeping family structure consistent."""
+    kw = {"num_layers": L}
+    if cfg.family == "hybrid":
+        kw["global_attn_layers"] = (0, L // 2, L - 1)
+    if cfg.enc_layers:
+        kw["enc_layers"] = L
+    return dataclasses.replace(cfg, **kw)
+
+
+def _build(cfg, shape, mesh, *, quant_kv, microbatch, kv_model_axis=False,
+           kv_seq_model=False):
+    """Build (jitted, abstract_args, state_bytes) for one step kind."""
+    model = get_model(cfg)
+    params_abs = model.abstract_params()
+    p_shard = shd.param_shardings(model, mesh)
+    specs = token_specs(cfg, shape)
+    in_shard = shd.batch_shardings(specs, mesh)
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        opt_cfg = optim.AdamWConfig()
+        opt_abs = jax.eval_shape(optim.init_state, params_abs)
+        o_shard = shd.opt_state_shardings(p_shard, mesh)
+        step = steps_mod.make_train_step(model, opt_cfg, microbatch=microbatch)
+        jitted = jax.jit(step, in_shardings=(p_shard, o_shard, in_shard),
+                         donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, specs)
+        state = _sharded_nbytes(params_abs, p_shard) + _sharded_nbytes(
+            opt_abs, o_shard)
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(B, shape.seq_len, dtype=jnp.bfloat16,
+                                     quant_kv=quant_kv))
+        seq_ok = shape.kind == "decode"
+        c_shard = shd.cache_shardings(cache_abs, mesh, seq_axis_ok=seq_ok,
+                                      kv_model_axis=kv_model_axis,
+                                      kv_seq_model=kv_seq_model)
+        if seq_ok:
+            mcommon.set_rules(seq="data")
+        fn = (steps_mod.make_decode_step(model) if shape.kind == "decode"
+              else steps_mod.make_prefill_step(model))
+        jitted = jax.jit(fn, in_shardings=(p_shard, c_shard, in_shard),
+                         donate_argnums=(1,))
+        args = (params_abs, cache_abs, specs)
+        state = _sharded_nbytes(params_abs, p_shard) + _sharded_nbytes(
+            cache_abs, c_shard)
+    return jitted, args, state
+
+
+def _compile_costs(cfg, shape, mesh, *, quant_kv, microbatch,
+                   kv_model_axis=False, kv_seq_model=False) -> dict:
+    """Compile once; return flops / bytes / collective stats (per device)."""
+    jitted, args, _ = _build(cfg, shape, mesh, quant_kv=quant_kv,
+                             microbatch=microbatch,
+                             kv_model_axis=kv_model_axis,
+                             kv_seq_model=kv_seq_model)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text(), group_size=16)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": float(coll.wire_bytes),
+        "counts": coll.counts,
+    }
+
+
+def _extrapolate(c1, c2, L1, L2, L):
+    out = {}
+    for k in ("flops", "bytes", "wire"):
+        slope = (c2[k] - c1[k]) / (L2 - L1)
+        out[k] = c1[k] + slope * (L - L1)
+    counts = {}
+    for kind in set(c1["counts"]) | set(c2["counts"]):
+        a, b = c1["counts"].get(kind, 0), c2["counts"].get(kind, 0)
+        counts[kind] = int(round(a + (b - a) / (L2 - L1) * (L - L1)))
+    out["counts"] = counts
+    return out
+
+
+def _attention_correction(cfg, shape) -> tuple[float, float]:
+    """Exact analytic FLOPs/bytes of the chunked-attention einsums, which sit
+    inside lax.scan bodies and are therefore counted once (not x trip count)
+    by XLA cost analysis.  Matches the implementation exactly: full
+    (Sq x Skv) rectangles with masking (the 2x causal overcompute is
+    deliberately included — it is what the code executes; removing it is a
+    §Perf hillclimb item).  Returns GLOBAL (flops, bytes) to add.
+
+    decode shapes need no correction (single-pass attention, fully counted).
+    """
+    if shape.kind == "decode" or cfg.family == "ssm":
+        return 0.0, 0.0
+    B = shape.global_batch
+    chunk = cfg.attn_chunk
+    mult_f = 4.0 if shape.kind == "train" else 1.0   # fwd+remat+2x bwd
+    mult_b = 3.0 if shape.kind == "train" else 1.0
+
+    def one(Sq, Skv, H, KH, hd, n_layers):
+        nq = max(-(-Sq // chunk), 1)
+        nk = max(-(-Skv // chunk), 1)
+        discount = 1.0 - 1.0 / (nq * nk)   # the once-counted body
+        f = 4.0 * B * H * Sq * Skv * hd * discount
+        by = (nq * B * Skv * KH * hd * 8.0 + B * Sq * H * hd * 12.0) * discount
+        return n_layers * f * mult_f, n_layers * by * mult_b
+
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    S = shape.seq_len + cfg.num_meta_tokens + cfg.num_prefix_tokens
+    fl, by = 0.0, 0.0
+    if cfg.family == "encdec":
+        f1, b1 = one(cfg.enc_seq, cfg.enc_seq, H, KH, hd, cfg.enc_layers)
+        f2, b2 = one(shape.seq_len, shape.seq_len, H, KH, hd, cfg.num_layers)
+        f3, b3 = one(shape.seq_len, cfg.enc_seq, H, KH, hd, cfg.num_layers)
+        fl, by = f1 + f2 + f3, b1 + b2 + b3
+    elif H:
+        fl, by = one(S, S, H, KH, hd, cfg.num_layers)
+    return fl, by
+
+
+def _activation_bytes(cfg, shape, mesh) -> int:
+    """Analytic per-device activation estimate (TPU memory model; XLA-CPU's
+    buffer assignment is not representative — see EXPERIMENTS.md)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    bsh = np.prod([axes.get(a, 1) for a in ("pod", "data")])
+    B_loc = max(shape.global_batch // int(bsh), 1)
+    d, L = cfg.d_model, cfg.num_layers
+    S = shape.seq_len if shape.kind != "decode" else 1
+    V_loc = cfg.padded_vocab // axes.get("model", 1)
+    carry = B_loc * S * d * 2                     # bf16 residual per layer
+    if shape.kind == "train":
+        saved = L * carry                          # remat=full: carries only
+        work = 8 * B_loc * S * d * 4               # attn/mlp working set f32
+        logits = 2 * B_loc * S * V_loc * 4         # CE fwd+bwd f32
+        return int(saved + work + logits)
+    work = 6 * B_loc * S * d * 4
+    logits = B_loc * 1 * V_loc * 4
+    return int(work + logits + carry)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             quant_kv: bool = False, microbatch: int = 1,
+             extra_rules: dict | None = None, probes: bool = True,
+             overrides: dict | None = None,
+             kv_model_axis: bool = False,
+             kv_seq_model: bool = False) -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    cell = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "quant_kv": quant_kv,
+    }
+    if not ok:
+        cell["skipped"] = reason
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    mcommon.reset_rules()
+    if extra_rules:
+        mcommon.set_rules(**extra_rules)
+
+    # 1. PROOF compile: full depth, scanned.
+    t0 = time.time()
+    jitted, args, state_bytes = _build(cfg, shape, mesh, quant_kv=quant_kv,
+                                       microbatch=microbatch,
+                                       kv_model_axis=kv_model_axis,
+                                       kv_seq_model=kv_seq_model)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # 2. COST probes: small unrolled depths, affine extrapolation in L.
+    L = cfg.num_layers
+    if probes:
+        if cfg.family == "hybrid":
+            L1, L2 = 5, 9
+        else:
+            L1, L2 = 2, 4
+        cfg1 = dataclasses.replace(_with_layers(cfg, L1), scan_layers=False)
+        cfg2 = dataclasses.replace(_with_layers(cfg, L2), scan_layers=False)
+        c1 = _compile_costs(cfg1, shape, mesh, quant_kv=quant_kv,
+                            microbatch=microbatch,
+                            kv_model_axis=kv_model_axis,
+                            kv_seq_model=kv_seq_model)
+        c2 = _compile_costs(cfg2, shape, mesh, quant_kv=quant_kv,
+                            microbatch=microbatch,
+                            kv_model_axis=kv_model_axis,
+                            kv_seq_model=kv_seq_model)
+        est = _extrapolate(c1, c2, L1, L2, L)
+    else:
+        cost = compiled.cost_analysis() or {}
+        coll = parse_collectives(compiled.as_text(), group_size=16)
+        est = {"flops": float(cost.get("flops", 0)),
+               "bytes": float(cost.get("bytes accessed", 0)),
+               "wire": float(coll.wire_bytes), "counts": coll.counts}
+
+    attn_f, attn_b = _attention_correction(cfg, shape)
+    flops = est["flops"] + attn_f / n_chips
+    hbm_bytes = est["bytes"] + attn_b / n_chips
+    wire = est["wire"]
+    terms = roofline_terms(flops=flops, hbm_bytes=hbm_bytes, wire_bytes=wire,
+                           n_chips=n_chips, hw=HW)
+
+    N_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    model_flops = (6 if shape.kind == "train" else 2) * N_active * tokens
+    model_flops_per_chip = model_flops / n_chips
+
+    act_bytes = _activation_bytes(cfg, shape, mesh)
+    per_dev = state_bytes + act_bytes
+    cell.update({
+        "compile_seconds": round(compile_s, 1),
+        "n_chips": n_chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": hbm_bytes,
+        "attn_correction_flops_per_chip": attn_f / n_chips,
+        "attn_correction_bytes_per_chip": attn_b / n_chips,
+        "collective_wire_bytes_per_chip": wire,
+        "collective_counts": est["counts"],
+        "roofline": terms,
+        "model_flops_total": model_flops,
+        "model_flops_per_chip": model_flops_per_chip,
+        "useful_flop_ratio": (model_flops_per_chip / flops) if flops else None,
+        "memory_analysis": {
+            "argument_size_in_bytes": int(mem.argument_size_in_bytes),
+            "output_size_in_bytes": int(mem.output_size_in_bytes),
+            "temp_size_in_bytes": int(mem.temp_size_in_bytes),
+            "alias_size_in_bytes": int(mem.alias_size_in_bytes),
+        },
+        "state_bytes_per_device": state_bytes,
+        "activation_bytes_per_device_est": act_bytes,
+        "peak_bytes_per_device_est": per_dev,
+        "fits_hbm": bool(per_dev < HW["hbm_bytes"]),
+        "mfu_upper_bound": (
+            model_flops_per_chip / HW["peak_flops_bf16"]
+        ) / max(terms["bound_step_s"], 1e-30),
+    })
+    return cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant-kv", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_cell(arch, shape, multi_pod=mp,
+                                 quant_kv=args.quant_kv,
+                                 microbatch=args.microbatch,
+                                 probes=not args.no_probes)
+                    if "skipped" in r:
+                        print(f"[skip] {tag}: {r['skipped']}", flush=True)
+                    else:
+                        print(
+                            f"[ok]   {tag}: compile={r['compile_seconds']}s "
+                            f"flops/chip={r['hlo_flops_per_chip']:.3e} "
+                            f"dominant={r['roofline']['dominant']} "
+                            f"fits={r['fits_hbm']}", flush=True)
+                except Exception as e:
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL] {tag}: {r['error']}", flush=True)
+                results.append(r)
+                # write incrementally so long sweeps are restartable
+                if args.out:
+                    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    if args.out:
+        print(f"wrote {args.out}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

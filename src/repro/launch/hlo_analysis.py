@@ -1,0 +1,126 @@
+"""Compiled-HLO analysis: collective traffic + roofline terms.
+
+cost_analysis() gives HLO FLOPs and bytes; collective bytes are NOT there,
+so we parse the (post-SPMD-partitioning) HLO text and sum the sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute result, converted to per-device wire traffic with ring
+formulas.  Shapes in partitioned HLO are already per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    """Sum of array sizes in a result type, handling tuples."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    result_bytes: dict     # per op kind, per-device result bytes
+    wire_bytes: int        # modeled per-device wire traffic (ring algs)
+
+    def as_dict(self):
+        return {
+            "counts": self.counts,
+            "result_bytes": self.result_bytes,
+            "wire_bytes": self.wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str, *, group_size: int = 16) -> CollectiveStats:
+    """Scan HLO for collective ops.  ``group_size`` is the typical
+    participant count used for the (n-1)/n ring factor — the dominant mesh
+    axis size; exact replica groups vary per op and are parsed when
+    present."""
+    counts: dict[str, int] = {}
+    rbytes: dict[str, int] = {}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                kind = c
+                break
+        if kind is None:
+            continue
+        n = group_size
+        gm = re.search(r"replica_groups=\{\{([^}]*)\}", s)
+        if gm:
+            n = max(len(gm.group(1).split(",")), 1)
+        else:
+            gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", s)
+            if gm2:
+                n = int(gm2.group(2))
+        b = _shape_bytes(result_type)
+        counts[kind] = counts.get(kind, 0) + 1
+        rbytes[kind] = rbytes.get(kind, 0) + b
+        ring = (n - 1) / max(n, 1)
+        if kind == "all-gather":
+            wire += b * ring                   # result is the gathered buf
+        elif kind == "all-reduce":
+            wire += 2 * b * ring               # reduce-scatter + all-gather
+        elif kind == "reduce-scatter":
+            wire += b * n * ring               # result is the scattered buf
+        elif kind == "all-to-all":
+            wire += b * ring
+        elif kind == "collective-permute":
+            wire += b
+    return CollectiveStats(counts, rbytes, int(wire))
+
+
+def roofline_terms(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    wire_bytes: float,
+    n_chips: int,
+    hw: dict,
+) -> dict:
+    """Three roofline terms, in seconds (whole step, already per-device
+    because partitioned-HLO costs are per-device)."""
+    t_compute = flops / hw["peak_flops_bf16"]
+    t_memory = hbm_bytes / hw["hbm_bw"]
+    t_collective = wire_bytes / hw["ici_bw"]
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_collective), key=lambda kv: kv[1],
+    )[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_step_s": max(t_compute, t_memory, t_collective),
+    }

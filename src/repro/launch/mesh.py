@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e-256 pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+pure data parallelism whose collectives cross the data-center network.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(shape=None, axes=None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape, axes = (n,), ("data",)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+# TPU v5e hardware constants (per chip) for the roofline model.
+HW = {
+    "name": "tpu_v5e",
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link (~4 links usable per chip)
+    "dcn_bw": 6.25e9,              # B/s per host cross-pod (assumed 50 Gbit)
+    "hbm_bytes": 16e9,
+    "vmem_bytes": 128 * 2**20 / 8, # 16 MiB VMEM
+}

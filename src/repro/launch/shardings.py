@@ -1,0 +1,113 @@
+"""Logical-axis -> mesh sharding resolution for params, optimizer state,
+inputs and caches.
+
+Rules (see DESIGN.md §5):
+  batch   -> (pod, data)     activations' batch dim
+  fsdp    -> data            weights' d_model-adjacent dim (ZeRO-3)
+  tensor  -> model           heads / d_ff / expert-ff dims (TP)
+  experts -> model            MoE expert dim (EP alias of TP axis)
+  vocab   -> model           embedding/logits vocab dim
+  seq     -> (None|data)     KV-cache seq dim (context parallelism for
+                              batch-1 long-context decode)
+
+Every rule application is divisibility-checked per-dim; non-dividing axes
+fall back to replication for that dim (e.g. minitron's 24 heads on a
+16-way model axis stay unsharded while its flattened 3072-wide q
+projection shards cleanly).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import common as mcommon
+
+
+def param_shardings(model, mesh):
+    """NamedShardings for every model parameter from its logical axes."""
+    axes = model.param_axes()
+    abstract = model.abstract_params()
+
+    def resolve(ax, arr):
+        return NamedSharding(mesh, mcommon.resolve_pspec(ax, arr.shape, mesh))
+
+    return jax.tree.map(
+        resolve, axes, abstract, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def opt_state_shardings(param_shardings_tree, mesh):
+    """Adam moments inherit param shardings; step counter replicated."""
+    return {
+        "mu": param_shardings_tree,
+        "nu": param_shardings_tree,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(specs: dict, mesh, *, seq_sharded: bool = False):
+    """Input shardings: batch over (pod,data) when divisible; batch-1
+    long-context inputs shard nothing (tokens) — their cache shards seq."""
+    out = {}
+    for k, v in specs.items():
+        dims = [None] * len(v.shape)
+        spec = mcommon.resolve_pspec(
+            ("batch",) + (None,) * (len(v.shape) - 1), v.shape, mesh
+        )
+        out[k] = NamedSharding(mesh, spec)
+        del dims
+    return out
+
+
+def cache_shardings(cache_tree, mesh, *, seq_axis_ok: bool,
+                    kv_model_axis: bool = False,
+                    kv_seq_model: bool = False):
+    """KV/SSM cache shardings.
+
+    Layout per leaf (stacked segments): (L, B, S, KH, hd) / (L, B, H, N, P)
+    or unstacked (B, S, ...).  Batch shards over (pod,data) when divisible;
+    otherwise (batch-1 long context) the seq dim shards over data.
+
+    kv_model_axis: additionally shard the kv-heads dim (or head_dim when
+    head count doesn't divide) over 'model' — TP-sharded KV cache (§Perf).
+    """
+    avail = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in avail)
+    batch_size = int(np.prod([avail[a] for a in batch_axes])) if batch_axes else 1
+
+    def resolve(arr):
+        if not hasattr(arr, "shape") or arr.ndim == 0:
+            return NamedSharding(mesh, P())
+        shape = arr.shape
+        # find the batch dim: first dim for unstacked, second for stacked
+        # heuristics: stacked leaves have ndim >= 4 with dim0 == n_layers.
+        spec = [None] * arr.ndim
+        bdim = 0 if arr.ndim <= 3 else 1
+        sdim = bdim + 1
+        if shape[bdim] % batch_size == 0 and batch_size > 1:
+            spec[bdim] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+        elif (
+            seq_axis_ok
+            and "data" in avail
+            and arr.ndim > sdim
+            and shape[sdim] % avail["data"] == 0
+            and shape[sdim] > 1024
+        ):
+            spec[sdim] = "data"   # context parallelism over the cache seq
+        if (kv_seq_model and "model" in avail and arr.ndim >= sdim + 3
+                and spec[sdim] is None and shape[sdim] % avail["model"] == 0
+                and shape[sdim] > avail["model"]):
+            # flash-decoding style: split the cache SEQ dim over 'model';
+            # softmax merges via tiny psums, no contracting-dim resharding
+            spec[sdim] = "model"
+        elif kv_model_axis and "model" in avail and arr.ndim >= sdim + 3:
+            # (..., S, KH, hd): prefer the head dim, fall back to head_dim
+            for dim in (sdim + 1, sdim + 2):
+                if shape[dim] % avail["model"] == 0 and shape[dim] > 1:
+                    spec[dim] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(resolve, cache_tree)

@@ -1,0 +1,83 @@
+"""Step-function builders: train / prefill / decode, ready for jit with
+explicit shardings (used by the trainer, the server, and the dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import optim
+from ..models import common as mcommon
+
+
+def make_train_step(model, opt_cfg: optim.AdamWConfig, *, microbatch: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``microbatch > 1`` accumulates gradients over batch slices
+    via lax.scan (sequential, memory-bounded)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatch > 1:
+            B = batch["tokens"].shape[0]
+            mb = B // microbatch
+
+            def one(carry, i):
+                acc, loss_acc = carry
+                sl = jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(x, i * mb, mb, 0),
+                    batch,
+                )
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, sl
+                )
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g
+                )
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                one, (zeros, 0.0), jnp.arange(microbatch)
+            )
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            metrics = {"loss": loss_sum / microbatch}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+        params, opt_state, om = optim.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(model):
+    def prefill_step(params, cache, batch):
+        kw: dict[str, Any] = {}
+        if "prefix_embeds" in batch:
+            kw["prefix_embeds"] = batch["prefix_embeds"]
+        if "encoder_embeds" in batch:
+            kw["encoder_embeds"] = batch["encoder_embeds"]
+        logits, cache = model.prefill(params, batch["tokens"], cache, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, batch):
+        logits, cache = model.decode_step(params, batch["tokens"], cache)
+        # greedy next-token (serving returns token ids, not logits, to keep
+        # the host transfer tiny)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step

@@ -1,0 +1,71 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-1b-a400m \
+        --steps 1000 --batch 32 --seq 512 --ckpt /tmp/run1 [--reduced]
+
+On a real TPU slice this binary is what each host runs (jax.distributed
+initializes from the TPU env); on CPU it trains over host devices.
+Re-running the same command resumes from the newest committed checkpoint
+(crash/preemption recovery); pass a different device topology to restore
+elastically.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro import optim
+from repro.configs import ARCHS, get_config, reduce_config
+from repro.data import TokenPipeline
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import get_model
+from repro.runtime import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internvl2-1b", choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized sibling config (default on CPU)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 mesh (requires 256 devices)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced or jax.default_backend() == "cpu":
+        cfg = reduce_config(cfg)
+    cfg = dataclasses.replace(cfg, num_prefix_tokens=0, enc_layers=0)
+
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    model = get_model(cfg)
+    pipe = TokenPipeline(cfg.vocab_size, batch=args.batch, seq_len=args.seq,
+                         seed=args.seed,
+                         process_index=jax.process_index(),
+                         process_count=jax.process_count())
+    trainer = Trainer(
+        model, mesh=mesh, pipeline=pipe,
+        opt_cfg=optim.AdamWConfig(lr=args.lr, warmup_steps=args.steps // 20,
+                                  total_steps=args.steps),
+        ckpt_dir=args.ckpt, ckpt_every=args.ckpt_every,
+        microbatch=args.microbatch,
+    )
+    hist = trainer.run(args.steps)
+    if hist:
+        print(f"[train] {args.arch}: loss {hist[0]['loss']:.4f} -> "
+              f"{hist[-1]['loss']:.4f}; stragglers: "
+              f"{len(trainer.monitor.events)}")
+
+
+if __name__ == "__main__":
+    main()

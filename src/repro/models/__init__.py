@@ -1,0 +1,16 @@
+"""Model zoo: unified access to all assigned architectures."""
+from .base import SHAPES, ModelConfig, ShapeCfg, shape_applicable, token_specs
+from .encdec import EncDec
+from .lm import LM
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDec(cfg)
+    return LM(cfg)
+
+
+__all__ = [
+    "SHAPES", "ModelConfig", "ShapeCfg", "shape_applicable", "token_specs",
+    "EncDec", "LM", "get_model",
+]

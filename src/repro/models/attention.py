@@ -1,0 +1,336 @@
+"""Grouped-query attention with flash-style chunked online softmax (pure XLA).
+
+Why no Pallas here: the dry-run must ``.lower().compile()`` on the CPU
+backend, where TPU Pallas kernels cannot compile (interpret mode cannot be
+jit-compiled into the SPMD program).  The chunked online-softmax
+formulation below gives flash-attention's O(S) memory profile in plain
+XLA, which the TPU compiler maps onto fused MXU loops; a Splash-style
+Pallas kernel is a drop-in swap on real hardware.
+
+Supports: GQA (num_kv_heads < num_heads), QKV bias (Qwen), RoPE or
+sinusoidal positions, sliding-window masks (Hymba), cross-attention
+(Whisper), KV-cache decode with context-parallel cache sharding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import PSpec, apply_rope, constrain, rope_freqs
+
+NEG_INF = -2.0e38
+
+
+def attn_specs(cfg, *, cross: bool = False) -> dict:
+    d = cfg.d_model
+    qf = cfg.num_heads * cfg.head_dim
+    kf = cfg.num_kv_heads * cfg.head_dim
+    specs = {
+        "wq": PSpec((d, qf), ("fsdp", "tensor")),
+        "wk": PSpec((d, kf), ("fsdp", "tensor")),
+        "wv": PSpec((d, kf), ("fsdp", "tensor")),
+        "wo": PSpec((qf, d), ("tensor", "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs["bq"] = PSpec((qf,), (None,), "zeros")
+        specs["bk"] = PSpec((kf,), (None,), "zeros")
+        specs["bv"] = PSpec((kf,), (None,), "zeros")
+    return specs
+
+
+def _project_qkv(cfg, p, xq, xkv):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, Sq, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _positions_embed(cfg, q, k, q_pos, k_pos):
+    if cfg.pos_embedding == "rope":
+        cq, sq = rope_freqs(cfg.head_dim, cfg.rope_theta, q_pos)
+        ck, sk = rope_freqs(cfg.head_dim, cfg.rope_theta, k_pos)
+        q = apply_rope(q, cq, sq)
+        k = apply_rope(k, ck, sk)
+    return q, k
+
+
+def _chunked_attention(
+    q, k, v, *, num_kv: int, q0, causal: bool, window: int, chunk: int,
+    bf16_dot: bool = False,
+):
+    """Flash-style attention.  q (B,Sq,H,hd), k/v (B,Skv,KH,hd) -> (B,Sq,H,hd).
+
+    Scans q in chunks of `chunk`; inner scan over kv chunks keeps running
+    (max, denom, acc) — peak memory O(B*H*chunk^2) instead of O(B*H*Sq*Skv).
+    ``q0`` is the absolute position of q[0] (decode offset / meta tokens).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    G = H // num_kv
+    scale = hd ** -0.5
+
+    qc = min(chunk, Sq)
+    kc = min(chunk, Skv)
+    # pad to multiples
+    Sq_p = -(-Sq // qc) * qc
+    Skv_p = -(-Skv // kc) * kc
+    q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Skv_p - Skv), (0, 0), (0, 0)))
+    nq, nk = Sq_p // qc, Skv_p // kc
+
+    dot_dt = jnp.bfloat16 if bf16_dot else jnp.float32
+    qs = (q.reshape(B, nq, qc, num_kv, G, hd).astype(jnp.float32)
+          * scale).astype(dot_dt)
+    ks = k.reshape(B, nk, kc, num_kv, hd).astype(dot_dt)
+    vs = v.reshape(B, nk, kc, num_kv, hd).astype(dot_dt)
+    # scan over kv chunks as leading axis
+    ks = jnp.moveaxis(ks, 1, 0)  # (nk, B, kc, KH, hd)
+    vs = jnp.moveaxis(vs, 1, 0)
+    qs = jnp.moveaxis(qs, 1, 0)  # (nq, B, qc, KH, G, hd)
+
+    kv_valid = jnp.arange(Skv_p) < Skv
+
+    def q_step(_, q_in):
+        qi, qchunk = q_in  # scalar index, (B,qc,KH,G,hd)
+        q_pos = q0 + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            ki, kchunk, vchunk, valid = kv_in
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qchunk, kchunk,
+                preferred_element_type=jnp.float32,
+            )  # (B, KH, G, qc, kc)
+            mask = valid[None, :]
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(dot_dt), vchunk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, num_kv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, num_kv, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, num_kv, G, qc, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), ks, vs, kv_valid.reshape(nk, kc)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # (B,KH,G,qc,hd)
+        return None, jnp.moveaxis(out, 3, 1).reshape(B, qc, num_kv * G, hd)
+
+    _, outs = lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_p, H, hd)[:, :Sq]
+    return out
+
+
+def attention(
+    cfg,
+    p: dict,
+    x,
+    *,
+    xkv=None,                 # cross-attention context (None = self)
+    cache: dict | None = None,
+    q0=0,                     # absolute position of first query
+    causal: bool = True,
+    window: int = 0,
+):
+    """Full attention block: project → rope → (cache) → attend → out-proj.
+
+    cache: {"k","v": (B, S_max, KH, hd), "pos": ()} — decode appends at
+    ``pos`` and attends over the first pos+Sq entries.  Returns
+    (out (B,Sq,d), new_cache | None).
+    """
+    B, Sq, _ = x.shape
+    # cross-attention: fresh context (xkv) or precomputed KV (cache w/o pos)
+    cross = xkv is not None or (cache is not None and "pos" not in cache)
+    src = xkv if xkv is not None else x
+    q, k, v = _project_qkv(cfg, p, x, src)
+    q = constrain(q, "batch", None, "tensor", None)
+
+    new_cache = None
+    if cache is not None and cross:
+        # cross-attention against precomputed encoder KV (no causal mask)
+        out = _decode_attention(
+            cfg, q, cache["k"], cache["v"],
+            jnp.asarray(0, jnp.int32), Sq, causal=False, window=0, full_len=True,
+        )
+    elif cache is not None and Sq <= 8:
+        # decode: rope at absolute cache position, append, single-pass attend
+        pos = cache["pos"]
+        S_buf = cache["k"].shape[1]
+        ring = bool(window) and S_buf == window   # window-sized ring buffer
+        k_pos = pos + jnp.arange(Sq)
+        q, k = _rope_decode(cfg, q, k, k_pos)
+        wpos = (pos % S_buf) if ring else pos
+        if "k_scale" in cache:  # int8-quantized cache
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
+            ck = lax.dynamic_update_slice_in_dim(cache["k"], kq, wpos, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(cache["v"], vq, wpos, axis=1)
+            cks = lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, wpos, axis=1)
+            cvs = lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, wpos, axis=1)
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "pos": pos + Sq}
+            k_eff = ck.astype(jnp.bfloat16) * cks.astype(jnp.bfloat16)
+            v_eff = cv.astype(jnp.bfloat16) * cvs.astype(jnp.bfloat16)
+        else:
+            ck = lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), wpos, axis=1)
+            cv = lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), wpos, axis=1)
+            new_cache = {"k": ck, "v": cv, "pos": pos + Sq}
+            k_eff, v_eff = ck, cv
+        if ring:
+            # absolute position stored in each ring slot (-1 if not yet used)
+            slots = jnp.arange(S_buf)
+            kp = pos - ((pos - slots) % S_buf)
+            slot_pos = jnp.where(kp <= pos, kp, -1)
+        else:
+            slot_pos = jnp.arange(S_buf)
+        out = _decode_attention(cfg, q, k_eff, v_eff, pos, Sq,
+                                causal=causal, window=window,
+                                slot_pos=slot_pos)
+    else:
+        # train / prefill: chunked flash-style attention
+        positions = q0 + jnp.arange(Sq)
+        kv_positions = jnp.arange(src.shape[1]) + (0 if cross else q0)
+        if cfg.pos_embedding == "rope" and not cross:
+            q, k = _positions_embed(cfg, q, k, positions[None], kv_positions[None])
+        out = _chunked_attention(
+            q, k, v, num_kv=cfg.num_kv_heads, q0=q0,
+            causal=causal and not cross, window=window, chunk=cfg.attn_chunk,
+            bf16_dot=getattr(cfg, "attn_bf16_dot", False),
+        )
+        if cache is not None:
+            # prefill: persist KV into the cache buffer.  Window-sized ring
+            # buffers keep only the last S_buf tokens, placed at slot
+            # (absolute_position % S_buf) so decode can continue the ring.
+            S_buf = cache["k"].shape[1]
+            pos0 = cache["pos"]
+
+            def _store(buf, x_new, quantized=False):
+                if Sq <= S_buf:
+                    return lax.dynamic_update_slice_in_dim(
+                        buf, x_new.astype(buf.dtype),
+                        pos0 % S_buf if S_buf > 1 else pos0, axis=1)
+                tail = x_new[:, -S_buf:]
+                tail_pos = pos0 + Sq - S_buf + jnp.arange(S_buf)
+                slots = tail_pos % S_buf
+                return buf.at[:, slots].set(tail.astype(buf.dtype))
+
+            if "k_scale" in cache:
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                new_cache = {
+                    "k": _store(cache["k"], kq),
+                    "v": _store(cache["v"], vq),
+                    "k_scale": _store(cache["k_scale"], ks),
+                    "v_scale": _store(cache["v_scale"], vs),
+                    "pos": pos0 + Sq,
+                }
+            else:
+                new_cache = {
+                    "k": _store(cache["k"], k),
+                    "v": _store(cache["v"], v),
+                    "pos": pos0 + Sq,
+                }
+
+    out = out.astype(x.dtype).reshape(B, Sq, cfg.num_heads * cfg.head_dim)
+    out = constrain(out, "batch", None, "tensor")
+    return out @ p["wo"], new_cache
+
+
+def _rope_decode(cfg, q, k, k_pos):
+    """Apply rope at absolute cache positions (decode: q at pos..pos+Sq)."""
+    if cfg.pos_embedding != "rope":
+        return q, k
+    c, s = rope_freqs(cfg.head_dim, cfg.rope_theta, k_pos[None, :])
+    return apply_rope(q, c, s), apply_rope(k, c, s)
+
+
+def _decode_attention(cfg, q, k, v, pos, Sq, *, causal, window,
+                      full_len=False, slot_pos=None):
+    """Single-pass attention of Sq queries against a (possibly partially
+    filled) cache of length S_max.  Memory (B,H,Sq,S_max) f32 scores — fine
+    for Sq<=8; the cache seq dim may be sharded (context parallelism), in
+    which case GSPMD turns the softmax reductions into collectives.
+
+    ``slot_pos`` (S_max,) gives the absolute token position held by each
+    cache slot (ring buffers permute it; -1 marks unused slots)."""
+    B, _, H, hd = q.shape
+    KH = cfg.num_kv_heads
+    G = H // KH
+    S_max = k.shape[1]
+    k = constrain(k, "batch", "seq", "kv_heads", "kv_hd")
+    v = constrain(v, "batch", "seq", "kv_heads", "kv_hd")
+    if getattr(cfg, "attn_bf16_dot", False):
+        # bf16 operands, f32 accumulation: native MXU mode; avoids
+        # materializing an f32 copy of the whole KV cache (§Perf)
+        q5 = (q.reshape(B, Sq, KH, G, hd) * hd**-0.5).astype(jnp.bfloat16)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    else:
+        q5 = q.reshape(B, Sq, KH, G, hd).astype(jnp.float32) * hd**-0.5
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q5, k.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    k_idx = jnp.arange(S_max) if slot_pos is None else slot_pos
+    q_pos = pos + jnp.arange(Sq)
+    if full_len:
+        valid = jnp.ones((Sq, S_max), bool)
+    else:
+        valid = k_idx[None, :] >= 0
+        if causal:
+            valid = valid & (k_idx[None, :] <= q_pos[:, None])
+        if window:
+            valid = valid & (k_idx[None, :] > q_pos[:, None] - window)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if getattr(cfg, "attn_bf16_dot", False):
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(jnp.bfloat16),
+                         v.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd)
+
+
+def quantize_kv(x):
+    """Per-(batch, position, head) absmax int8 quantization of (B,S,KH,hd)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

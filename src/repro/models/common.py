@@ -1,0 +1,250 @@
+"""Shared model machinery: parameter specs, logical-axis sharding, norms,
+RoPE, losses.
+
+Parameters are described ONCE as ``PSpec`` trees (shape + logical axes +
+init); ``build_params`` materializes arrays, ``abstract_params`` gives
+ShapeDtypeStructs (dry-run), ``logical_axes`` the matching axes tree.
+Logical axis names are resolved to mesh axes by launch/shardings.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    """One parameter: shape, logical sharding axes, initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Any, ...]           # logical axis name (str) or None per dim
+    init: str = "fan_in"            # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Any = None               # None -> model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_specs(tree, n: int):
+    """Prepend a ('layers',) stacking dim of size n to every spec in tree."""
+    return jax.tree.map(
+        lambda s: PSpec((n, *s.shape), ("layers", *s.axes), s.init, s.scale, s.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def _init_array(key, spec: PSpec, default_dtype):
+    dtype = spec.dtype or default_dtype
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, shape)).astype(dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, shape)).astype(dtype)
+    if spec.init == "fan_in":
+        # stacked specs: fan_in excludes the leading 'layers' dim
+        dims = shape[1:] if spec.axes and spec.axes[0] == "layers" else shape
+        fan_in = dims[0] if dims else 1
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, shape)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def build_params(specs, key, default_dtype=jnp.bfloat16):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_array(k, s, default_dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(specs, default_dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or default_dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def logical_axes(specs):
+    return jax.tree.map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis activation constraints
+# ---------------------------------------------------------------------------
+
+# Default logical -> mesh translation; launch/shardings.py may override via
+# set_rules().  Tuples mean "sharded over multiple mesh axes".
+_DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",        # weight embed-dim sharding (ZeRO-3)
+    "tensor": "model",     # TP: heads / d_ff / vocab
+    "experts": "model",
+    "seq": None,           # set to 'data' for context-parallel decode
+    "seq_act": None,       # set to 'model' for Megatron-SP residual stream
+    "kv_heads": None,      # set to 'model' for TP-sharded KV caches
+    "kv_hd": None,         # fallback when kv head count doesn't divide
+    "layers": None,
+    "vocab": "model",
+}
+_rules = dict(_DEFAULT_RULES)
+
+
+def set_rules(**kw):
+    _rules.update(kw)
+
+
+def get_rules() -> dict:
+    return dict(_rules)
+
+
+def reset_rules():
+    _rules.clear()
+    _rules.update(_DEFAULT_RULES)
+
+
+def _mesh_axes_of(mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def to_pspec(axes: tuple, mesh=None):
+    """Translate logical axes to a PartitionSpec, dropping mesh axes that are
+    absent or that do not divide the corresponding dim (caller checks dims)."""
+    from jax.sharding import PartitionSpec as P
+
+    names = []
+    for a in axes:
+        r = _rules.get(a) if isinstance(a, str) else None
+        names.append(r)
+    return P(*names)
+
+
+def resolve_pspec(axes: tuple, shape: tuple, mesh):
+    """PartitionSpec with divisibility + axis-existence checks per dim.
+
+    A mesh axis may appear at most once in a spec, so logical axes are
+    resolved left-to-right and later dims drop any mesh axis already
+    claimed (e.g. MoE ('experts','fsdp','tensor') -> ('model','data',None):
+    the expert dim wins the model axis; per-expert ff stays unsharded)."""
+    from jax.sharding import PartitionSpec as P
+
+    avail = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, a in zip(shape, axes):
+        r = _rules.get(a) if isinstance(a, str) else None
+        if r is None:
+            out.append(None)
+            continue
+        axes_tuple = (r,) if isinstance(r, str) else tuple(r)
+        axes_tuple = tuple(x for x in axes_tuple if x in avail and x not in used)
+        size = int(np.prod([avail[x] for x in axes_tuple])) if axes_tuple else 1
+        if axes_tuple and dim % size == 0:
+            out.append(axes_tuple if len(axes_tuple) > 1 else axes_tuple[0])
+            used.update(axes_tuple)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint using logical axes; no-op outside a mesh."""
+    from jax._src import mesh as mesh_lib
+
+    env_mesh = mesh_lib.thread_resources.env.physical_mesh
+    if env_mesh.empty:
+        return x
+    spec = resolve_pspec(tuple(axes), x.shape, env_mesh)
+    return lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * lax.rsqrt(var + eps)).astype(dt) * (1.0 + scale.astype(dt))
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def apply_norm(kind: str, x, p):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_specs(kind: str, d: int) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": PSpec((d,), (None,), "zeros")}
+    return {"scale": PSpec((d,), (None,), "ones"), "bias": PSpec((d,), (None,), "zeros")}
+
+
+def rope_freqs(head_dim: int, theta: float, positions):
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2) f32."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, hd); cos/sin: (B, S, hd/2) or (S, hd/2)."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    if cos.ndim == 2:
+        c, s = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        c, s = cos[:, :, None, :], sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 1e-4, mask=None):
+    """logits (B,S,V) f32-upcast CE with optional z-loss and label mask.
+    labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    safe_labels = jnp.maximum(labels, 0)
+    ll = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+    ce = lse - ll
+    if z_loss:
+        ce = ce + z_loss * lse**2
+    valid = (labels >= 0).astype(jnp.float32)
+    if mask is not None:
+        valid = valid * mask.astype(jnp.float32)
+    return (ce * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    return -(-v // multiple) * multiple

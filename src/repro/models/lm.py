@@ -1,0 +1,303 @@
+"""Decoder-only LM assembly: segments of stacked blocks, scanned with
+jax.lax.scan (keeps the HLO one-layer-sized at 512 devices), with KV /
+SSM caches threaded through the scan, modality prefixes (VLM patch
+embeddings), Hymba meta tokens, and optional remat.
+
+A model is a list of ``Segment``s.  Dense archs have one segment; Hymba
+is [global, swa-stack, global, swa-stack, global] so its sliding-window
+layers can (a) carry a different mask and (b) later use window-sized
+caches; Whisper's decoder reuses these blocks via encdec.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks as blk
+from .base import ModelConfig, ShapeCfg, token_specs
+from .common import (PSpec, abstract_params, apply_norm, build_params,
+                     constrain, logical_axes, norm_specs,
+                     softmax_cross_entropy, stack_specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str          # dense | moe | mamba | hymba
+    n_layers: int
+    window: int = 0    # sliding-window size for attention (0 = full)
+    name: str = ""
+
+
+def model_segments(cfg: ModelConfig) -> list[Segment]:
+    if cfg.family in ("dense", "vlm"):
+        return [Segment("dense", cfg.num_layers, cfg.attn_window, "layers")]
+    if cfg.family == "moe":
+        return [Segment("moe", cfg.num_layers, 0, "layers")]
+    if cfg.family == "ssm":
+        return [Segment("mamba", cfg.num_layers, 0, "layers")]
+    if cfg.family == "hybrid":
+        # global full-attention layers at first / middle / last (Hymba).
+        g = sorted(set(cfg.global_attn_layers or (0, cfg.num_layers // 2,
+                                                  cfg.num_layers - 1)))
+        segs: list[Segment] = []
+        prev = 0
+        for i, gl in enumerate(g):
+            if gl > prev:
+                segs.append(Segment("hymba", gl - prev, cfg.attn_window,
+                                    f"swa_{i}"))
+            segs.append(Segment("hymba", 1, 0, f"global_{gl}"))
+            prev = gl + 1
+        if prev < cfg.num_layers:
+            segs.append(Segment("hymba", cfg.num_layers - prev,
+                                cfg.attn_window, f"swa_tail"))
+        return segs
+    raise ValueError(f"family {cfg.family!r} not handled by lm.py")
+
+
+class LM:
+    """Functional decoder-only language model."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.segments = model_segments(cfg)
+
+    # -- parameters ---------------------------------------------------------
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        d, V = cfg.d_model, cfg.padded_vocab
+        specs: dict[str, Any] = {"final_norm": norm_specs(cfg.norm, d)}
+        if cfg.cpd_embed_rank:
+            from . import factorized_embed as fe
+
+            specs["embed_cpd"] = fe.cpd_embed_specs(V, d, cfg.cpd_embed_rank)
+            specs["unembed"] = PSpec((d, V), ("fsdp", "vocab"))
+        else:
+            specs["embed"] = PSpec((V, d), ("vocab", "fsdp"), "embed",
+                                   scale=0.02)
+            if not cfg.tie_embeddings:
+                specs["unembed"] = PSpec((d, V), ("fsdp", "vocab"))
+        if cfg.num_meta_tokens:
+            specs["meta_tokens"] = PSpec(
+                (cfg.num_meta_tokens, d), (None, "fsdp"), "normal", scale=0.02
+            )
+        segs = {}
+        for i, seg in enumerate(self.segments):
+            s = blk.block_specs(cfg, seg.kind)
+            segs[f"seg{i}_{seg.name or seg.kind}"] = (
+                stack_specs(s, seg.n_layers) if seg.n_layers > 1 else s
+            )
+        specs["segments"] = segs
+        return specs
+
+    def init(self, key):
+        return build_params(self.param_specs(), key, self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.param_specs(), self.cfg.param_dtype)
+
+    def param_axes(self):
+        return logical_axes(self.param_specs())
+
+    def _seg_keys(self) -> list[str]:
+        return [f"seg{i}_{s.name or s.kind}" for i, s in enumerate(self.segments)]
+
+    # -- caches -------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int, *, dtype=jnp.bfloat16,
+                   quant_kv: bool = False) -> dict:
+        cfg = self.cfg
+        caches: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+        total = max_len + cfg.num_meta_tokens + cfg.num_prefix_tokens
+        for i, seg in enumerate(self.segments):
+            # window-limited segments still get full-length buffers only if
+            # global; SWA segments cap at window (+ meta prefix).
+            seg_len = total if not seg.window else min(total, seg.window)
+            one = blk.init_block_cache(cfg, seg.kind, batch, seg_len,
+                                       dtype, quant_kv)
+            if seg.n_layers > 1:
+                one = jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (seg.n_layers, *a.shape)), one
+                )
+            caches[self._seg_keys()[i]] = one
+        return caches
+
+    # -- forward ------------------------------------------------------------
+
+    def _tok_embed(self, params, tokens):
+        cfg = self.cfg
+        if cfg.cpd_embed_rank:
+            from . import factorized_embed as fe
+
+            return fe.cpd_embed_lookup(
+                params["embed_cpd"], tokens, cfg.padded_vocab
+            ).astype(cfg.param_dtype)
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def _embed(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = self._tok_embed(params, tokens)
+        n_prefix = 0
+        if cfg.num_meta_tokens and "meta_tokens" in params:
+            meta = jnp.broadcast_to(
+                params["meta_tokens"][None], (x.shape[0], cfg.num_meta_tokens,
+                                              cfg.d_model)
+            ).astype(x.dtype)
+            x = jnp.concatenate([meta, x], axis=1)
+            n_prefix += cfg.num_meta_tokens
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+            n_prefix += prefix_embeds.shape[1]
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + _sinusoid(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)
+        # seq_act: optional Megatron-SP sharding of the residual stream
+        return constrain(x, "batch", "seq_act", None), n_prefix
+
+    def _run_segments(self, params, x, *, caches=None, q0=0):
+        cfg = self.cfg
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches: dict[str, Any] = {}
+        pos = caches["pos"] if caches is not None else None
+        keys = self._seg_keys()
+
+        for i, seg in enumerate(self.segments):
+            p_seg = params["segments"][keys[i]]
+            c_seg = caches.get(keys[i]) if caches is not None else None
+
+            def one_layer(x, p, c, _seg=seg):
+                return blk.block_apply(
+                    cfg, _seg.kind, p, x, cache=c, pos=pos,
+                    window=_seg.window, q0=q0,
+                )
+
+            if cfg.remat != "none":
+                one_layer = jax.checkpoint(
+                    one_layer,
+                    policy=jax.checkpoint_policies.nothing_saveable
+                    if cfg.remat == "full"
+                    else jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                )
+
+            if seg.n_layers > 1 and cfg.scan_layers:
+                def body(carry, xs, _f=one_layer):
+                    h, aux = carry
+                    p, c = xs
+                    h, c2, a = _f(h, p, c)
+                    return (h, aux + a), c2
+
+                (x, aux_total), seg_cache = lax.scan(
+                    body, (x, aux_total), (p_seg, c_seg)
+                )
+            elif seg.n_layers > 1:
+                # unrolled: exact per-layer HLO (dry-run cost accounting; on
+                # real hw also enables cross-layer fusion)
+                outs = []
+                for li in range(seg.n_layers):
+                    p_li = jax.tree.map(lambda a: a[li], p_seg)
+                    c_li = (jax.tree.map(lambda a: a[li], c_seg)
+                            if c_seg is not None else None)
+                    x, c2, a = one_layer(x, p_li, c_li)
+                    aux_total = aux_total + a
+                    outs.append(c2)
+                seg_cache = (
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                    if outs and outs[0] else {}
+                )
+            else:
+                x, seg_cache, a = one_layer(x, p_seg, c_seg)
+                aux_total = aux_total + a
+            if caches is not None:
+                new_caches[keys[i]] = seg_cache
+        if caches is not None:
+            # advance the shared position cursor by the query length
+            new_caches["pos"] = caches["pos"] + x.shape[1]
+        return x, new_caches if caches is not None else None, aux_total
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(cfg.norm, x, params["final_norm"])
+        un = (params["embed"].T
+              if cfg.tie_embeddings and not cfg.cpd_embed_rank
+              else params["unembed"])
+        logits = x @ un.astype(x.dtype)
+        return constrain(logits, "batch", None, "vocab")
+
+    def forward(self, params, tokens, *, prefix_embeds=None):
+        x, n_prefix = self._embed(params, tokens, prefix_embeds)
+        x, _, aux = self._run_segments(params, x)
+        logits = self._logits(params, x)
+        return logits[:, n_prefix:], aux
+
+    def loss(self, params, batch) -> tuple[jnp.ndarray, dict]:
+        cfg = self.cfg
+        if cfg.loss_chunk:
+            # chunked CE: never materializes the full (B, S, V) f32 logits —
+            # per-chunk logits are rematerialized in the backward (§Perf)
+            x, n_prefix = self._embed(params, batch["tokens"],
+                                      batch.get("prefix_embeds"))
+            x, _, aux = self._run_segments(params, x)
+            x = x[:, n_prefix:]
+            labels = batch["labels"]
+            C = cfg.loss_chunk
+            S = x.shape[1]
+            nc = -(-S // C)
+            x = jnp.pad(x, ((0, 0), (0, nc * C - S), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, nc * C - S)),
+                             constant_values=-1)
+            xc = jnp.moveaxis(x.reshape(x.shape[0], nc, C, -1), 1, 0)
+            lc = jnp.moveaxis(labels.reshape(labels.shape[0], nc, C), 1, 0)
+
+            @jax.checkpoint
+            def chunk_ce(carry, xs):
+                xch, lch = xs
+                logits = self._logits(params, xch)
+                lse = jax.scipy.special.logsumexp(
+                    logits.astype(jnp.float32), axis=-1)
+                safe = jnp.maximum(lch, 0)
+                ll = jnp.take_along_axis(
+                    logits.astype(jnp.float32), safe[..., None], axis=-1
+                )[..., 0]
+                ce_i = (lse - ll) + 1e-4 * lse**2
+                valid = (lch >= 0).astype(jnp.float32)
+                return (carry[0] + (ce_i * valid).sum(),
+                        carry[1] + valid.sum()), None
+
+            (ce_sum, n), _ = lax.scan(chunk_ce, (0.0, 0.0), (xc, lc))
+            ce = ce_sum / jnp.maximum(n, 1.0)
+            loss = ce + 0.01 * aux
+            return loss, {"ce": ce, "aux": aux, "loss": loss}
+        logits, aux = self.forward(
+            params, batch["tokens"], prefix_embeds=batch.get("prefix_embeds")
+        )
+        ce = softmax_cross_entropy(logits, batch["labels"])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+    # -- serving ------------------------------------------------------------
+
+    def prefill(self, params, tokens, cache, *, prefix_embeds=None):
+        x, n_prefix = self._embed(params, tokens, prefix_embeds)
+        x, cache2, _ = self._run_segments(params, x, caches=cache)
+        logits = self._logits(params, x[:, -1:])
+        return logits, cache2
+
+    def decode_step(self, params, tokens, cache):
+        """tokens (B, 1) -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        x = self._tok_embed(params, tokens)
+        if cfg.pos_embedding == "sinusoidal":
+            x = x + _sinusoid(cache["pos"][None], cfg.d_model).astype(x.dtype)
+        x = constrain(x, "batch", None, None)
+        x, cache2, _ = self._run_segments(params, x, caches=cache)
+        return self._logits(params, x), cache2
+
+
+def _sinusoid(positions, d):
+    half = d // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freq[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[None]

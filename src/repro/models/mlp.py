@@ -1,0 +1,179 @@
+"""Dense MLP (SwiGLU/GeGLU/GELU) + sorted-capacity Mixture-of-Experts.
+
+MoE design (dbrx 16e/top-4, granite 32e/top-8): tokens are routed top-k,
+sorted by expert id, gathered into per-expert capacity buffers, processed
+by a batched (E, C, d) x (E, d, ff) einsum — a grouped GEMM the SPMD
+partitioner can shard on the expert axis (expert parallelism) and/or the
+ff axis (tensor parallelism) — and scattered back weighted by router
+probs.  Static shapes throughout (capacity drop, GShard-style); dropped
+tokens fall back to the residual stream.
+
+The token->expert dispatch is itself a sparse mode-contraction, and the
+adaptive rule of the paper (partition *indices* when plentiful, partition
+*nonzeros* + reduce when not) is mirrored here: experts (few) are the
+"small output mode", so dispatch partitions tokens and reduces — the
+paper's scheme-2 shape (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import PSpec, constrain
+
+
+def mlp_specs(cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi": PSpec((d, ff), ("fsdp", "tensor")),
+            "wg": PSpec((d, ff), ("fsdp", "tensor")),
+            "wo": PSpec((ff, d), ("tensor", "fsdp")),
+        }
+    return {
+        "wi": PSpec((d, ff), ("fsdp", "tensor")),
+        "wo": PSpec((ff, d), ("tensor", "fsdp")),
+    }
+
+
+def mlp_apply(cfg, p, x):
+    h = x @ p["wi"]
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * h
+    elif cfg.activation == "relu2":   # squared ReLU (Nemotron / Minitron)
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", None, "tensor")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg) -> dict:
+    d, E, ff = cfg.d_model, cfg.num_experts, cfg.moe_dff
+    return {
+        "router": PSpec((d, E), ("fsdp", None), dtype=jnp.float32),
+        "wi": PSpec((E, d, ff), ("experts", "fsdp", "tensor")),
+        "wg": PSpec((E, d, ff), ("experts", "fsdp", "tensor")),
+        "wo": PSpec((E, ff, d), ("experts", "tensor", "fsdp")),
+    }
+
+
+def moe_apply(cfg, p, x):
+    """x: (B, S, d) -> (B, S, d), plus load-balance aux loss (returned 2nd).
+
+    Dispatch is PER BATCH ROW (group = sequence): sort, capacity and
+    gather/scatter all act on (B, S*k) so no cross-device data dependence
+    is introduced — the batch axis sharding survives into the grouped
+    GEMM (a globally-sorted dispatch forces GSPMD to all-gather the whole
+    token set and replicate expert compute across the data axis; measured
+    5x FLOP inflation in the dry run — see EXPERIMENTS.md §Perf).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    if getattr(cfg, "moe_dense_eval", False):
+        return _moe_dense_eval(cfg, p, x)
+
+    logits = x.astype(jnp.float32) @ p["router"]              # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = lax.top_k(probs, k)                         # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # GShard aux loss: mean prob per expert * fraction routed per expert.
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[expert.reshape(-1)].add(
+        1.0) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    # Per-row capacity (GShard-style dropping keeps shapes static).
+    C = int(cfg.capacity_factor * S * k / E)
+    C = max(8, -(-C // 8) * 8)
+
+    fe = expert.reshape(B, S * k)                              # (B, S*k)
+    ft = jnp.broadcast_to(jnp.arange(S)[:, None], (S, k)).reshape(1, S * k)
+    ft = jnp.broadcast_to(ft, (B, S * k))
+    fg = gate.reshape(B, S * k)
+    order = jnp.argsort(fe, axis=1)                            # stable per row
+    se = jnp.take_along_axis(fe, order, axis=1)
+    st = jnp.take_along_axis(ft, order, axis=1)
+    sg = jnp.take_along_axis(fg, order, axis=1)
+    seg_pos = jax.vmap(_segment_positions)(se)
+    keep = seg_pos < C
+    slot = jnp.where(keep, se * C + seg_pos, E * C)            # drop -> E*C
+
+    # Gather tokens into per-row (E*C, d) buffers (extra row absorbs drops).
+    rows = jnp.arange(B)[:, None]
+    xs = jnp.take_along_axis(x, st[..., None], axis=1)         # (B, S*k, d)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype).at[rows, slot].set(xs)
+    xe = buf[:, : E * C].reshape(B, E, C, d)
+    xe = constrain(xe, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", xe, p["wi"])
+    g = jnp.einsum("becd,edf->becf", xe, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, "batch", "experts", None, "tensor")
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"])              # (B, E, C, d)
+
+    # Scatter back, weighted by gate prob.
+    yf = ye.reshape(B, E * C, d)
+    contrib = (jnp.where(keep, sg, 0.0) * keep)[..., None].astype(x.dtype)
+    safe_slot = jnp.minimum(slot, E * C - 1)
+    gathered = jnp.take_along_axis(yf, safe_slot[..., None], axis=1)
+    y = jnp.zeros((B, S, d), x.dtype).at[rows, st].add(gathered * contrib)
+    return y, aux
+
+
+def _moe_dense_eval(cfg, p, x):
+    """Dispatch-free MoE: every expert processes every token; top-k gate
+    weights zero out the rest (§Perf hillclimb for FINE-GRAINED MoE).
+
+    Rationale: with tiny per-expert d_ff (granite: 512) the sort + scatter +
+    capacity-buffer traffic of real dispatch exceeds the cost of simply
+    computing all experts (E/k more FLOPs) when the cell is memory-bound —
+    napkin math and the measured before/after live in EXPERIMENTS.md §Perf.
+    No tokens are dropped (better quality than capacity dispatch, too).
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    logits = x.astype(jnp.float32) @ p["router"]              # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(probs).at[
+        jnp.arange(B)[:, None, None], jnp.arange(S)[None, :, None], expert
+    ].set(gate)                                               # (B, S, E)
+
+    me = probs.mean(axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[expert.reshape(-1)].add(
+        1.0) / (B * S * k)
+    aux = E * jnp.sum(me * ce)
+
+    h = jnp.einsum("bsd,edf->ebsf", x, p["wi"])
+    g = jnp.einsum("bsd,edf->ebsf", x, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = h * jnp.moveaxis(w, -1, 0)[..., None].astype(h.dtype)
+    h = constrain(h, "experts", "batch", None, None)
+    y = jnp.einsum("ebsf,efd->bsd", h, p["wo"])
+    return y, aux
+
+
+def _segment_positions(sorted_ids):
+    """Rank of each element within its (sorted) segment: [0,0,1,2,0,1,...]."""
+    n = sorted_ids.shape[0]
+    idx = jnp.arange(n)
+    # index of segment start for each element
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_ids[1:] != sorted_ids[:-1]]
+    )
+    start_idx = jnp.where(is_start, idx, 0)
+    start_idx = lax.associative_scan(jnp.maximum, start_idx)
+    return idx - start_idx

@@ -1,0 +1,227 @@
+"""Mamba-2 SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD: the selective state-space recurrence
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t h_t + D x_t
+is evaluated in O(S * Q) time by splitting the sequence into chunks of Q:
+  * intra-chunk: a masked (Q x Q) "attention" term  C_i L_ij B_j^T x_j,
+  * inter-chunk: per-chunk input states, combined by a sequential scan
+    over chunks carrying the (H, P, N) state, then broadcast back.
+This is the "matrix-transformer dual" form — MXU-friendly einsums instead
+of an elementwise scan over time.
+
+Decode is the recurrent form: constant-size state per layer
+(conv window + (H, P, N) SSM state), so a 524k-token context costs the
+same per step as an 8-token one — this is why mamba2/hymba run the
+``long_500k`` cell while full-attention archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .common import PSpec, constrain
+
+A_MIN, A_MAX = 1.0, 16.0
+DT_MIN, DT_MAX = 1e-3, 1e-1
+
+
+def ssm_specs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G = cfg.ssm_ngroups
+    N = cfg.ssm_state
+    conv_dim = di + 2 * G * N
+    return {
+        # projections: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": PSpec((d, 2 * di + 2 * G * N + H), ("fsdp", "tensor")),
+        "conv_w": PSpec((cfg.conv_kernel, conv_dim), (None, "tensor")),
+        "conv_b": PSpec((conv_dim,), ("tensor",), "zeros"),
+        "A_log": PSpec((H,), ("tensor",), "zeros"),
+        "D": PSpec((H,), ("tensor",), "zeros"),
+        "dt_bias": PSpec((H,), ("tensor",), "zeros"),
+        "norm_scale": PSpec((di,), (None,), "zeros"),
+        "out_proj": PSpec((di, d), ("tensor", "fsdp")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d: xBC (B,S,D), w (K,D)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(K):
+        out = out + pad[:, i : i + xBC.shape[1]] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y.astype(jnp.float32) * lax.rsqrt(var + eps)).astype(y.dtype) * (
+        1.0 + scale.astype(y.dtype)
+    )
+
+
+def ssd_apply(cfg, p, x, *, state=None):
+    """Train/prefill SSD.  x (B,S,d) -> (y (B,S,d), final_state | None).
+
+    state (if given) must be a fresh decode-state dict; prefill fills it.
+    """
+    B, S, d = x.shape
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    S_p = -(-S // Q) * Q
+
+    zxbcdt = x @ p["in_proj"]
+    z, xBC_raw, dt = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di]
+    Bm = xBC[..., di : di + G * N].reshape(B, S, G, N)
+    Cm = xBC[..., di + G * N :].reshape(B, S, G, N)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                    # (H,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])     # (B,S,H)
+    xh = xs.reshape(B, S, H, P)
+    # broadcast groups -> heads
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=2)                                # (B,S,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=2)
+
+    # pad to chunk multiple
+    if S_p != S:
+        padw = ((0, 0), (0, S_p - S))
+        xh = jnp.pad(xh, padw + ((0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, padw + ((0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, padw + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, padw + ((0, 0),))
+    nC = S_p // Q
+    xc = xh.reshape(B, nC, Q, H, P)
+    Bc = Bh.reshape(B, nC, Q, H, N)
+    Cc = Ch.reshape(B, nC, Q, H, N)
+    dtc = dt.reshape(B, nC, Q, H)
+
+    dA = dtc * A                                                    # (B,nC,Q,H)
+    cum = jnp.cumsum(dA, axis=2)                                    # within-chunk
+    # intra-chunk (diagonal block): y_ij = C_i . B_j * exp(cum_i - cum_j) * dt_j
+    Lmask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )                                                               # (B,nC,Qi,Qj,H)
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc,
+                    preferred_element_type=jnp.float32)
+    W = CB * decay * dtc[:, :, None, :, :]
+    W = jnp.where(Lmask[None, None, :, :, None], W, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+
+    # chunk input states: sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T  -> (B,nC,H,N,P)
+    seg = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))    # (B,nC,Q,H)
+    Sin = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp", seg * dtc, Bc,
+                     xc.astype(jnp.float32), preferred_element_type=jnp.float32)
+
+    # sequential scan over chunks: h_{c} = exp(sum dA_c) h_{c-1} + Sin_c
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))   # (B,nC,H)
+
+    if state is not None and "ssm" in state:
+        h0 = state["ssm"].astype(jnp.float32)                       # (B,H,N,P)
+    else:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def chunk_step(h, ins):
+        cd, s_in = ins                                              # (B,H), (B,H,N,P)
+        h_new = h * cd[..., None, None] + s_in
+        return h_new, h
+
+    (h_final, h_prevs) = lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(Sin, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                            # state BEFORE chunk c
+
+    # inter-chunk output: y_i += C_i exp(cum_i) h_prev
+    inter_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))                # (B,nC,Q,H)
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Cc * inter_decay[..., None],
+                         h_prev, preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(B, S_p, H, P)[:, :S]
+    y = y + xh.reshape(B, S_p, H, P)[:, :S].astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    y = constrain(y, "batch", None, "tensor")
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        K = cfg.conv_kernel
+        conv_tail = jnp.pad(
+            xBC_raw, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0))
+        )[:, -(K - 1):]
+        new_state = {
+            "ssm": h_final.astype(jnp.float32),
+            "conv": conv_tail.astype(x.dtype),
+            "pos": state["pos"] + S,
+        }
+    return out, new_state
+
+
+def ssd_decode_step(cfg, p, x, state):
+    """Single-token recurrent step.  x (B,1,d); state {ssm (B,H,N,P),
+    conv (B,K-1,conv_dim), pos ()} -> (y (B,1,d), new state)."""
+    B = x.shape[0]
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    K = cfg.conv_kernel
+
+    zxbcdt = x @ p["in_proj"]                                       # (B,1,·)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv over (window, new token)
+    window = jnp.concatenate([state["conv"], xBC], axis=1)          # (B,K,D)
+    conv_out = (window * p["conv_w"][None]).sum(axis=1, keepdims=True)
+    xBC = jax.nn.silu(conv_out + p["conv_b"])
+    xs = xBC[..., :di]
+    Bm = xBC[..., di : di + G * N].reshape(B, G, N)
+    Cm = xBC[..., di + G * N :].reshape(B, G, N)
+    hpg = H // G
+    Bh = jnp.repeat(Bm, hpg, axis=1)                                # (B,H,N)
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    decay = jnp.exp(dtv * A)                                        # (B,H)
+    xhead = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    h = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dtv, Bh.astype(jnp.float32), xhead
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), h)
+    y = y + xhead * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = y @ p["out_proj"]
+    new_state = {
+        "ssm": h,
+        "conv": window[:, 1:],
+        "pos": state["pos"] + 1,
+    }
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    P = cfg.ssm_head_dim
+    conv_dim = di + 2 * G * N
+    return {
+        "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,102 @@
+"""AdamW from scratch (no optax): pytree-native, mixed-precision aware.
+
+Moments are fp32 regardless of param dtype (bf16 training keeps master
+statistics in fp32 — standard large-scale practice).  Supports decoupled
+weight decay, global-norm gradient clipping, and warmup+cosine schedules.
+Optimizer state inherits the parameter sharding (launch/shardings.py),
+so ZeRO-style partitioning falls out of FSDP param sharding for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"   # cosine | constant | linear
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if cfg.schedule == "linear":
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * t
+        else:
+            decay = cfg.min_lr_ratio + 0.5 * (1 - cfg.min_lr_ratio) * (
+                1 + jnp.cos(jnp.pi * t)
+            )
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> dict:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state,
+                  *, decay_mask: Callable[[Any], bool] | None = None):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32) * scale
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mhat = mu2 / b1c
+        nhat = nu2 / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0   # no decay on norms/bias
+        p2 = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return p2.astype(p.dtype), mu2, nu2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a); new_mu.append(b); new_nu.append(c)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {"mu": jax.tree.unflatten(treedef, new_mu),
+         "nu": jax.tree.unflatten(treedef, new_nu),
+         "step": step},
+        {"grad_norm": gnorm, "lr": lr},
+    )

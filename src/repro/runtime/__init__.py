@@ -1,0 +1,3 @@
+from .trainer import StragglerMonitor, Trainer
+
+__all__ = ["StragglerMonitor", "Trainer"]

@@ -1,0 +1,45 @@
+"""Beyond-paper cost-model scheme selection: correctness + no regressions."""
+import numpy as np
+
+from repro.core import (Scheme, choose_scheme, choose_scheme_cost_based,
+                        cpd_als, frostt_like, make_plan, mttkrp,
+                        mttkrp_dense_ref, random_sparse, scheme_cost)
+
+
+def test_cost_policy_agrees_far_from_boundary():
+    """Far from I_d ~ kappa the cost model must agree with the paper's rule."""
+    t = random_sparse((5000, 4), 4000, seed=0, distribution="powerlaw")
+    assert choose_scheme_cost_based(t, 0, 82) == Scheme.INDEX_PARTITION
+    assert choose_scheme_cost_based(t, 1, 82) == Scheme.NNZ_PARTITION
+
+
+def test_cost_policy_never_worse_under_model():
+    """argmin of modeled cost is by construction <= the threshold pick."""
+    for name in ("uber", "vast", "chicago"):
+        t = frostt_like(name, scale=0.005, seed=1)
+        for d in range(t.nmodes):
+            thr = choose_scheme(t.shape[d], 82)
+            cb = choose_scheme_cost_based(t, d, 82)
+            c_thr = scheme_cost(t, d, 82, thr)
+            c_cb = scheme_cost(t, d, 82, cb)
+            assert c_cb <= c_thr + 1e-12
+
+
+def test_cost_policy_plan_still_correct():
+    """MTTKRP through a cost-policy plan matches the dense oracle."""
+    t = random_sparse((120, 90, 30), 1000, seed=2, distribution="powerlaw")
+    rng = np.random.default_rng(0)
+    factors = [rng.standard_normal((I, 8)).astype(np.float32)
+               for I in t.shape]
+    plan = make_plan(t, kappa=82, policy="cost")
+    for d in range(3):
+        ref = mttkrp_dense_ref(t, factors, d)
+        out = np.asarray(mttkrp(plan, factors, d))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_cost_policy_cpd_end_to_end():
+    t = frostt_like("uber", scale=0.003, seed=3)
+    plan = make_plan(t, kappa=82, policy="cost")
+    res = cpd_als(t, rank=8, plan=plan, n_iters=3, tol=-1.0)
+    assert np.isfinite(res.fits[-1])

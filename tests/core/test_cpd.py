@@ -1,0 +1,62 @@
+"""CPD-ALS behaviour: fit recovery, monotonicity, engine equivalence."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import cpd_als, low_rank_sparse, random_sparse
+from repro.core.coo import SparseTensor
+
+
+def _dense_lowrank(shape, R, seed):
+    rng = np.random.default_rng(seed)
+    F = [rng.standard_normal((I, R)).astype(np.float32) for I in shape]
+    dense = np.einsum("ir,jr,kr->ijk", *F)
+    idx = np.array(list(itertools.product(*[range(s) for s in shape])),
+                   dtype=np.int32)
+    return SparseTensor(idx, dense.reshape(-1).astype(np.float32), shape), F
+
+
+def test_exact_recovery_fully_observed():
+    t, _ = _dense_lowrank((12, 10, 8), 3, seed=0)
+    res = cpd_als(t, rank=3, n_iters=50, kappa=4, tol=1e-9)
+    assert res.fits[-1] > 0.999
+
+
+def test_fit_nondecreasing_tail():
+    t = random_sparse((30, 20, 15), 1500, seed=1, distribution="powerlaw")
+    res = cpd_als(t, rank=6, n_iters=12, kappa=8, tol=-1.0)
+    fits = np.array(res.fits)
+    # ALS fit is monotone up to tiny fp noise
+    assert np.all(np.diff(fits) > -1e-4), fits
+
+
+@pytest.mark.parametrize("backend", ["segment", "coo"])
+def test_backends_equivalent_trajectories(backend):
+    t = random_sparse((25, 18, 12), 800, seed=2)
+    a = cpd_als(t, rank=4, n_iters=4, kappa=4, tol=-1.0, backend="segment")
+    b = cpd_als(t, rank=4, n_iters=4, kappa=4, tol=-1.0, backend=backend)
+    np.testing.assert_allclose(a.fits, b.fits, rtol=1e-4, atol=1e-5)
+
+
+def test_noisy_lowrank_fit_reasonable():
+    t, _ = low_rank_sparse((20, 20, 20), 4000, rank=3, seed=3, noise=0.01)
+    res = cpd_als(t, rank=3, n_iters=30, kappa=8)
+    assert res.fits[-1] > 0.25  # sampled mask => partial fit, but well above 0
+
+
+def test_weights_and_normalization():
+    t, _ = _dense_lowrank((10, 9, 8), 2, seed=4)
+    res = cpd_als(t, rank=2, n_iters=30, kappa=2)
+    for F in res.factors:
+        norms = np.linalg.norm(F, axis=0)
+        np.testing.assert_allclose(norms, 1.0, atol=1e-3)
+    assert np.all(res.weights > 0)
+
+
+def test_reconstruct_at_matches_values():
+    t, _ = _dense_lowrank((8, 7, 6), 2, seed=5)
+    res = cpd_als(t, rank=2, n_iters=40, kappa=2, tol=1e-10)
+    approx = res.reconstruct_at(t.indices)
+    err = np.linalg.norm(approx - t.values) / np.linalg.norm(t.values)
+    assert err < 0.02

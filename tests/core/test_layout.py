@@ -1,0 +1,55 @@
+"""Mode-specific layout invariants."""
+import numpy as np
+import pytest
+
+from repro.core import Scheme, build_all_mode_layouts, build_mode_layout, random_sparse
+from repro.core.coo import _linearize
+
+
+@pytest.mark.parametrize("kappa", [1, 4, 82])
+def test_layout_is_permutation_of_tensor(kappa):
+    t = random_sparse((60, 33, 21), 1500, seed=2, distribution="powerlaw")
+    for lay in build_all_mode_layouts(t, kappa):
+        # same multiset of (coords, value)
+        k1 = _linearize(t.indices, t.shape)
+        k2 = _linearize(lay.indices, t.shape)
+        assert sorted(k1.tolist()) == sorted(k2.tolist())
+        np.testing.assert_allclose(np.sort(t.values), np.sort(lay.values))
+
+
+def test_rows_sorted_and_row_ptr():
+    t = random_sparse((50, 20, 10), 900, seed=3, distribution="powerlaw")
+    for d in range(3):
+        lay = build_mode_layout(t, d, 7)
+        assert np.all(np.diff(lay.rows) >= 0), "relabeled rows must be sorted"
+        # row_ptr consistency
+        for r in (0, 1, lay.num_rows // 2, lay.num_rows - 1):
+            s, e = lay.row_ptr[r], lay.row_ptr[r + 1]
+            assert np.all(lay.rows[s:e] == r)
+        # relabel round-trip
+        orig_rows = lay.row_perm[lay.rows]
+        np.testing.assert_array_equal(orig_rows, lay.indices[:, d])
+
+
+def test_partition_row_ranges_disjoint():
+    t = random_sparse((90, 45, 30), 1200, seed=4, distribution="powerlaw")
+    lay = build_mode_layout(t, 0, 8, scheme=Scheme.INDEX_PARTITION)
+    assert np.all(lay.row_lo[1:] == lay.row_hi[:-1]), "contiguous ranges"
+    assert lay.row_lo[0] == 0 and lay.row_hi[-1] == lay.num_rows
+    # nnz of partition p touch only rows in [lo, hi)
+    for p in range(8):
+        s, e = lay.part_offsets[p], lay.part_offsets[p + 1]
+        if e > s:
+            assert lay.rows[s:e].min() >= lay.row_lo[p]
+            assert lay.rows[s:e].max() < lay.row_hi[p]
+
+
+def test_memory_report_matches_paper_model():
+    from repro.core import format_memory_report
+    t = random_sparse((100, 50, 25), 2000, seed=5)
+    layouts = build_all_mode_layouts(t, 82)
+    rep = format_memory_report(t, layouts)
+    # N copies of (indices + rows + values)
+    expect = 3 * (2000 * 3 * 4 + 2000 * 4 + 2000 * 4)
+    assert rep["copies_bytes"] == expect
+    assert rep["analytic_copies_bytes"] < rep["copies_bytes"]  # bit-packing tighter

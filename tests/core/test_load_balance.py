@@ -1,0 +1,73 @@
+"""Load-balancing invariants: completeness, disjointness, the 4/3 bound,
+adaptive selection."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Scheme, balance_bound_holds, choose_scheme,
+                        partition_mode, random_sparse)
+
+
+def test_adaptive_rule():
+    assert choose_scheme(100, 82) == Scheme.INDEX_PARTITION
+    assert choose_scheme(82, 82) == Scheme.INDEX_PARTITION
+    assert choose_scheme(81, 82) == Scheme.NNZ_PARTITION
+    assert choose_scheme(2, 82) == Scheme.NNZ_PARTITION
+
+
+@pytest.mark.parametrize("assignment", ["greedy", "cyclic"])
+@pytest.mark.parametrize("kappa", [1, 3, 8, 82])
+def test_partition_completeness(assignment, kappa):
+    t = random_sparse((120, 40, 7), 2000, seed=5, distribution="powerlaw")
+    for d in range(3):
+        part = partition_mode(t, d, kappa, assignment=assignment)
+        # every nnz exactly once
+        assert len(part.perm) == t.nnz
+        assert len(np.unique(part.perm)) == t.nnz
+        assert part.offsets[0] == 0 and part.offsets[-1] == t.nnz
+        assert np.all(np.diff(part.offsets) >= 0)
+        # scheme 1: vertex ownership is a partition of the index set, and
+        # each partition's nnz all map to its own vertices
+        if part.scheme == Scheme.INDEX_PARTITION:
+            vp = part.vertex_part
+            assert vp.shape == (t.shape[d],)
+            assert vp.min() >= 0 and vp.max() < kappa
+            idx_d = t.indices[part.perm][:, d]
+            for p in range(min(kappa, 10)):
+                s, e = part.offsets[p], part.offsets[p + 1]
+                assert np.all(vp[idx_d[s:e]] == p)
+
+
+def test_scheme2_equal_split():
+    t = random_sparse((5, 400, 9), 1003, seed=6)
+    part = partition_mode(t, 0, 8, scheme=Scheme.NNZ_PARTITION)
+    loads = part.loads
+    assert loads.max() - loads.min() <= 1
+    # ordered by output vertex id
+    rows = t.indices[part.perm][:, 0]
+    assert np.all(np.diff(rows) >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 1000), st.integers(2, 3))
+def test_property_graham_bound(kappa, seed, mode_count):
+    """Greedy LPT partitioning respects max_load <= 4/3 * opt_lower_bound."""
+    shape = (37, 23, 11)[:mode_count] + (29,)
+    t = random_sparse(shape, 600, seed=seed, distribution="powerlaw")
+    for d in range(t.nmodes):
+        part = partition_mode(t, d, kappa, scheme=Scheme.INDEX_PARTITION,
+                              assignment="greedy")
+        assert balance_bound_holds(part, t), (
+            d, part.loads.max(), part.loads.mean())
+
+
+def test_greedy_beats_or_matches_cyclic():
+    t = random_sparse((300, 300, 300), 20_000, seed=7, distribution="powerlaw")
+    worse = 0
+    for d in range(3):
+        g = partition_mode(t, d, 82, scheme=Scheme.INDEX_PARTITION,
+                           assignment="greedy").imbalance()
+        c = partition_mode(t, d, 82, scheme=Scheme.INDEX_PARTITION,
+                           assignment="cyclic").imbalance()
+        worse += g > c + 1e-9
+    assert worse == 0, "LPT should never lose to cyclic on max load"

@@ -1,0 +1,115 @@
+"""Dry-run machinery tests: sharding resolution, HLO collective parsing,
+roofline terms, and a small-mesh end-to-end dry-run (subprocess)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax
+
+from repro.launch.hlo_analysis import (_shape_bytes, parse_collectives,
+                                       roofline_terms)
+from repro.launch.mesh import HW
+from repro.models import common as mcommon
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("f32[4]") == 16
+    assert _shape_bytes("(f32[2,2], s8[4])") == 16 + 4
+    assert _shape_bytes("pred[16]") == 16
+
+
+def test_parse_collectives_counts_and_wire():
+    hlo = """
+      %ag = bf16[16,256] all-gather(%x), replica_groups={{0,1,2,3}}, dimensions={0}
+      %ar.1 = f32[1024] all-reduce(%y), replica_groups={{0,1}}, to_apply=%add
+      %rs = f32[64] reduce-scatter(%z), replica_groups={{0,1,2,3}}
+      %cp = bf16[8,8] collective-permute(%w), source_target_pairs={{0,1}}
+      %mm = f32[8,8] dot(%a, %b)
+    """
+    st = parse_collectives(hlo, group_size=4)
+    assert st.counts == {"all-gather": 1, "all-reduce": 1,
+                         "reduce-scatter": 1, "collective-permute": 1}
+    ag = 16 * 256 * 2
+    assert st.result_bytes["all-gather"] == ag
+    # ring model: AG result*(n-1)/n; AR 2*b*(n-1)/n; RS b*n*(n-1)/n; CP b
+    expect = (ag * 3 / 4 + 2 * 4096 * 1 / 2 + 256 * 4 * 3 / 4 + 128)
+    assert abs(st.wire_bytes - expect) <= 2
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12, hbm_bytes=0, wire_bytes=0, n_chips=1,
+                       hw=HW)
+    assert t["dominant"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    t = roofline_terms(flops=0, hbm_bytes=819e9, wire_bytes=1, n_chips=1,
+                       hw=HW)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops=1, hbm_bytes=1, wire_bytes=50e9, n_chips=1,
+                       hw=HW)
+    assert t["dominant"] == "collective"
+
+
+def test_resolve_pspec_rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mcommon.reset_rules()
+    # divisible -> sharded; non-divisible -> dropped; duplicates -> dropped
+    spec = mcommon.resolve_pspec(("fsdp", "tensor"), (16, 16), mesh)
+    assert spec == jax.sharding.PartitionSpec("data", "model")
+    spec = mcommon.resolve_pspec(("experts", "fsdp", "tensor"), (4, 8, 8), mesh)
+    assert spec == jax.sharding.PartitionSpec("model", "data", None)
+    spec = mcommon.resolve_pspec(("tensor",), (7,), mesh)  # 7 % 1 == 0
+    assert spec == jax.sharding.PartitionSpec("model")
+
+
+def test_resolve_pspec_divisibility():
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    import jax.sharding as js
+    mcommon.reset_rules()
+    # 24 heads on 16-way axis would not divide on a real 16-mesh; emulate
+    # via direct check of the helper logic with a fake avail
+    spec = mcommon.resolve_pspec(("tensor", None), (24, 3), mesh)
+    assert spec == js.PartitionSpec("model", None)
+
+
+@pytest.mark.slow
+def test_small_mesh_dryrun_end_to_end():
+    """Full dry-run path on an 8-device 'production-shaped' mesh."""
+    code = """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import repro.launch.dryrun as dr
+        import repro.launch.mesh as mesh_mod
+        import jax
+        def small_mesh(*, multi_pod=False):
+            shape = (2, 2, 2) if multi_pod else (4, 2)
+            axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+        dr.make_production_mesh = small_mesh
+        import dataclasses
+        from repro.configs import get_config, reduce_config
+        real_get = dr.get_config
+        dr.get_config = lambda a: dataclasses.replace(
+            reduce_config(real_get(a)), num_layers=6)
+        for mp in (False, True):
+            r = dr.run_cell("internvl2-1b", "train_4k", multi_pod=mp)
+            assert "error" not in r, r
+            assert r["hlo_flops_per_chip"] > 0
+            assert r["collective_wire_bytes_per_chip"] >= 0
+            assert r["roofline"]["dominant"] in ("compute", "memory", "collective")
+            print("MESH", r["mesh"], "OK", r["roofline"]["dominant"])
+        print("PASS")
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=1800)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "PASS" in out.stdout

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+train step + decode parity on CPU, asserting shapes and no NaNs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduce_config
+from repro.models import get_model
+
+
+def _batch(cfg, B=2, S=19, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.num_prefix_tokens:
+        batch["prefix_embeds"] = 0.02 * jax.random.normal(
+            ks[2], (B, cfg.num_prefix_tokens, cfg.d_model))
+    if cfg.enc_layers:
+        batch["encoder_embeds"] = 0.1 * jax.random.normal(
+            ks[3], (B, cfg.enc_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduce_config(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves), "no gradient flow"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = reduce_config(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 17
+    batch = _batch(cfg, B=B, S=S, seed=1)
+    toks = batch["tokens"]
+    kw = {}
+    if "prefix_embeds" in batch:
+        kw["prefix_embeds"] = batch["prefix_embeds"]
+    if "encoder_embeds" in batch:
+        full, _ = model.forward(params, toks, batch["encoder_embeds"])
+        cache = model.init_cache(B, S + 4, dtype=jnp.float32)
+        _, cache = model.prefill(params, toks[:, :-1], cache,
+                                 encoder_embeds=batch["encoder_embeds"])
+    else:
+        full, _ = model.forward(params, toks, **kw)
+        cache = model.init_cache(B, S + 4, dtype=jnp.float32)
+        _, cache = model.prefill(params, toks[:, :-1], cache, **kw)
+    dec, _ = model.decode_step(params, toks[:, -1:], cache)
+    ref = np.asarray(full[:, -1:])
+    rel = np.abs(np.asarray(dec) - ref).max() / max(np.abs(ref).max(), 1e-9)
+    assert rel < 5e-4, f"{arch}: decode/forward mismatch rel={rel}"
+    assert dec.shape == (B, 1, cfg.padded_vocab)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-32b", "hymba-1.5b"])
+def test_quantized_kv_decode_close(arch):
+    cfg = reduce_config(get_config(arch))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    B, S = 2, 17
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    c16 = model.init_cache(B, S + 4, dtype=jnp.float32)
+    c8 = model.init_cache(B, S + 4, dtype=jnp.float32, quant_kv=True)
+    _, c16 = model.prefill(params, toks[:, :-1], c16)
+    _, c8 = model.prefill(params, toks[:, :-1], c8)
+    a, _ = model.decode_step(params, toks[:, -1:], c16)
+    b, _ = model.decode_step(params, toks[:, -1:], c8)
+    # int8 cache is approximate: logits close, argmax preserved
+    rel = float(jnp.abs(a - b).max() / jnp.maximum(jnp.abs(a).max(), 1e-9))
+    assert rel < 0.05, rel
+    assert bool(jnp.all(jnp.argmax(a, -1) == jnp.argmax(b, -1)))
+
+
+def test_param_count_sanity():
+    """Full configs land near their published sizes."""
+    expected = {
+        "minitron-4b": (3.5e9, 5.0e9),
+        "qwen1.5-4b": (3.3e9, 4.8e9),
+        "phi4-mini-3.8b": (3.3e9, 4.9e9),
+        "qwen1.5-32b": (30e9, 38e9),
+        "hymba-1.5b": (1.2e9, 2.0e9),
+        "whisper-large-v3": (1.3e9, 1.9e9),
+        "dbrx-132b": (120e9, 140e9),
+        "granite-moe-1b-a400m": (1.0e9, 1.7e9),
+        "mamba2-780m": (0.6e9, 0.95e9),
+        "internvl2-1b": (0.45e9, 0.95e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    assert 30e9 < get_config("dbrx-132b").active_param_count() < 45e9

@@ -32,6 +32,9 @@ def main() -> None:
     if on("kernel"):
         from . import kernel_bench
         sections.append(("pallas kernel micro-bench", kernel_bench.main))
+    if on("als"):
+        from . import als_bench
+        sections.append(("ALS engine (fused device-resident vs host loop)", als_bench.main))
     if on("roofline"):
         from . import roofline
         sections.append(("roofline table (from dry-run)", roofline.main))

@@ -7,6 +7,7 @@ Public API:
   MTTKRPPlan, make_plan, mttkrp                               (mttkrp)
   cpd_als, CPDResult                                          (cpd)
 """
+from .als_device import cpd_als_fused, sweep_cache_stats
 from .coo import SparseTensor, frostt_like, low_rank_sparse, random_sparse
 from .cpd import CPDResult, cpd_als
 from .layout import ModeLayout, build_all_mode_layouts, build_mode_layout, format_memory_report
@@ -18,7 +19,7 @@ from .mttkrp import MTTKRPPlan, make_plan, mttkrp, mttkrp_dense_ref
 
 __all__ = [
     "SparseTensor", "frostt_like", "low_rank_sparse", "random_sparse",
-    "CPDResult", "cpd_als",
+    "CPDResult", "cpd_als", "cpd_als_fused", "sweep_cache_stats",
     "ModeLayout", "build_all_mode_layouts", "build_mode_layout", "format_memory_report",
     "DeviceProfile", "Partitioning", "Scheme", "balance_bound_holds",
     "choose_scheme", "choose_scheme_cost_based", "partition_mode", "scheme_cost",

@@ -34,6 +34,8 @@ class CPDResult:
     iters: int
     mttkrp_seconds: float         # total time in the bottleneck kernel
     total_seconds: float
+    host_syncs: int = 0           # device->host synchronizations performed
+    engine: str = "host"          # which ALS engine produced this result
 
     def reconstruct_at(self, indices: np.ndarray) -> np.ndarray:
         acc = np.ones((indices.shape[0], len(self.weights)))
@@ -69,11 +71,30 @@ def cpd_als(
     tol: float = 1e-5,
     seed: int = 0,
     backend: str = "segment",
+    engine: str = "fused",
+    check_every: int = 1,
     mttkrp_fn: Callable | None = None,
     verbose: bool = False,
 ) -> CPDResult:
-    """Run CPD-ALS.  ``mttkrp_fn(plan, factors, mode)`` may override the
-    engine (used by benchmarks to time alternative formats)."""
+    """Run CPD-ALS.
+
+    ``engine="fused"`` (default) delegates to the device-resident engine in
+    ``als_device`` — the whole N-mode sweep is one jitted computation and
+    the host syncs only every ``check_every`` iterations.  ``engine="host"``
+    keeps the original per-mode host loop (useful for benchmarking the
+    traffic the fused engine removes).  A custom ``mttkrp_fn(plan, factors,
+    mode)`` forces the host loop (benchmarks time alternative formats
+    through it)."""
+    if engine not in ("fused", "host"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if engine == "fused" and mttkrp_fn is None:
+        from .als_device import cpd_als_fused
+
+        return cpd_als_fused(
+            tensor, rank, plan=plan, kappa=kappa, n_iters=n_iters, tol=tol,
+            seed=seed, backend=backend, check_every=check_every,
+            verbose=verbose,
+        )
     t_start = time.perf_counter()
     rng = np.random.default_rng(seed)
     N = tensor.nmodes
@@ -87,6 +108,7 @@ def cpd_als(
     norm_x_sq = tensor.norm() ** 2
     fits: list[float] = []
     mttkrp_t = 0.0
+    host_syncs = 0
     last_fit = -np.inf
 
     grams = [np.asarray(F, np.float64).T @ np.asarray(F, np.float64) for F in factors]
@@ -100,6 +122,7 @@ def cpd_als(
             else:
                 M = mttkrp(plan, factors, d, backend=backend)
             M = np.asarray(jax.block_until_ready(M), dtype=np.float64)
+            host_syncs += 1
             mttkrp_t += time.perf_counter() - t0
 
             V = np.ones((rank, rank))
@@ -123,6 +146,7 @@ def cpd_als(
 
         ip = _innerprod_sparse(tensor, factors, weights)
         model_sq = _model_norm_sq(factors, weights)
+        host_syncs += N            # factor pulls for the sparse fit
         resid_sq = max(norm_x_sq - 2.0 * ip + model_sq, 0.0)
         fit = 1.0 - np.sqrt(resid_sq) / max(np.sqrt(norm_x_sq), 1e-12)
         fits.append(float(fit))
@@ -139,4 +163,6 @@ def cpd_als(
         iters=it,
         mttkrp_seconds=mttkrp_t,
         total_seconds=time.perf_counter() - t_start,
+        host_syncs=host_syncs,
+        engine="host",
     )

@@ -30,7 +30,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # older jax keeps shard_map under experimental
+    from jax.experimental.shard_map import shard_map
 
 from ..kernels import ref as kref
 from .coo import SparseTensor

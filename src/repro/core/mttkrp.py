@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from ..kernels import ops as kops
 from ..kernels import ref as kref
+from ..kernels.mttkrp_pallas import mttkrp_pallas
 from .coo import SparseTensor
 from .layout import ModeLayout, build_all_mode_layouts
 from .load_balance import Scheme
@@ -43,6 +44,8 @@ class MTTKRPPlan:
     tile: int = kops.DEFAULT_TILE
     _packed: dict[int, kops.PackedModeLayout] = dataclasses.field(default_factory=dict)
     _dev_arrays: dict[int, tuple] = dataclasses.field(default_factory=dict)
+    _dev_packed: dict[int, tuple] = dataclasses.field(default_factory=dict)
+    _dev_coo: tuple | None = None
 
     def packed(self, mode: int) -> kops.PackedModeLayout:
         if mode not in self._packed:
@@ -63,6 +66,30 @@ class MTTKRPPlan:
                 jnp.asarray(lay.row_perm),
             )
         return self._dev_arrays[mode]
+
+    def device_packed(self, mode: int) -> tuple:
+        """Packed slab arrays as jnp device arrays (cached): uploaded once,
+        reused by every pallas-backend call and the fused ALS engine."""
+        if mode not in self._dev_packed:
+            p = self.packed(mode)
+            self._dev_packed[mode] = (
+                jnp.asarray(p.rb_of),
+                jnp.asarray(p.first),
+                jnp.asarray(p.idx_packed),
+                jnp.asarray(p.vals_packed),
+                jnp.asarray(p.lrows_packed),
+            )
+        return self._dev_packed[mode]
+
+    def device_coo(self) -> tuple:
+        """COO indices/values as jnp device arrays (cached): the coo backend
+        previously re-uploaded both from host numpy on every call."""
+        if self._dev_coo is None:
+            self._dev_coo = (
+                jnp.asarray(self.tensor.indices),
+                jnp.asarray(self.tensor.values),
+            )
+        return self._dev_coo
 
 
 def make_plan(
@@ -97,6 +124,11 @@ def _segment_backend(input_indices, rows, values, factors, row_perm, num_rows):
     return jnp.zeros_like(out_rel).at[row_perm].set(out_rel)
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "num_rows"))
+def _coo_backend(indices, values, factors, mode, num_rows):
+    return kref.mttkrp_coo(indices, values, list(factors), mode, num_rows)
+
+
 def mttkrp(
     plan: MTTKRPPlan,
     factors: Sequence[jnp.ndarray],
@@ -104,6 +136,7 @@ def mttkrp(
     *,
     backend: str = "segment",
     interpret: bool = True,
+    rank_block: int | None = None,
 ) -> jnp.ndarray:
     """MTTKRP along ``mode``: returns (I_mode, R) f32 in original row order."""
     lay = plan.layouts[mode]
@@ -117,15 +150,27 @@ def mttkrp(
         )
     if backend == "pallas":
         packed = plan.packed(mode)
-        out_rel = kops.mttkrp_packed(packed, in_factors, interpret=interpret)
+        if rank_block is None:
+            rank = int(in_factors[0].shape[1])
+            factor_rows = sum(int(f.shape[0]) for f in in_factors)
+            rank_block = kops.auto_rank_block(
+                rank, packed.block_rows, packed.tile, factor_rows,
+                len(in_factors)
+            ) or rank
+        rb_of, first, idxp, valsp, lrowsp = plan.device_packed(mode)
+        out_rel = mttkrp_pallas(
+            rb_of, first, idxp, valsp, lrowsp, in_factors,
+            num_row_blocks=packed.num_row_blocks,
+            block_rows=packed.block_rows, tile=packed.tile,
+            rank_block=rank_block, interpret=interpret,
+        )[: packed.num_rows]
         return jnp.zeros_like(out_rel).at[jnp.asarray(lay.row_perm)].set(out_rel)
     if backend == "coo":
-        return kref.mttkrp_coo(
-            jnp.asarray(plan.tensor.indices),
-            jnp.asarray(plan.tensor.values),
-            [jnp.asarray(f) for f in factors],
-            mode,
-            lay.num_rows,
+        indices, values = plan.device_coo()
+        return _coo_backend(
+            indices, values,
+            tuple(jnp.asarray(f) for f in factors),
+            mode, lay.num_rows,
         )
     raise ValueError(f"unknown backend {backend!r}")
 

@@ -13,18 +13,24 @@ TPU-native re-think of the paper's R x P thread-block kernel (§IV-B):
     written back to HBM once per row block — this is the paper's
     "eliminate intermediate-value traffic" property, realized through the
     Pallas pipeline instead of L1 atomics.
+  * Rank is tiled: the grid is 2-D ``(R_blocks, G)`` with the slab
+    dimension minor, so each rank block makes one full pass over the
+    slabs while only ``rank_block`` factor/output columns are resident in
+    VMEM.  Columns are independent in MTTKRP, so rank tiling is exact
+    (bit-identical to the single-block kernel) and removes the hard VMEM
+    rank ceiling the single-block version had.
   * Factor-row gathers and the final scatter-reduce both become one-hot
     matmuls on the MXU when the index space is small (`onehot`), else
     vector gathers (`take`).  The Hadamard accumulator ``l`` (paper's
     l(r)) lives in VREGs/VMEM for its whole life.
 
 Block layout (VMEM, per grid step):
-  idx_ref   : (W, T)  int32   input-mode indices (lane dim = T)
-  val_ref   : (1, T)  float   nonzero values
-  lrow_ref  : (1, T)  int32   output row local to this row block
-  factors   : (I_w, R) each   full factor matrices, VMEM-resident
-                              (small-tensor regime, paper §II-A.4)
-  out_ref   : (BR, R) float32 one output row block, revisited across slabs
+  idx_ref   : (W, T)   int32   input-mode indices (lane dim = T)
+  val_ref   : (1, T)   float   nonzero values
+  lrow_ref  : (1, T)   int32   output row local to this row block
+  factors   : (I_w, RB) each   one rank block of each factor matrix
+  out_ref   : (BR, RB) float32 one (row block, rank block) output tile,
+                               revisited across slabs of the row block
 
 Scalar-prefetch:
   rb_of (G,) int32  output row-block id per grid step (drives out index_map)
@@ -56,14 +62,14 @@ def _kernel(
 ):
     factor_refs = refs[:num_inputs]
     out_ref = refs[num_inputs]
-    g = pl.program_id(0)
+    g = pl.program_id(1)          # slab index (minor grid dimension)
 
     @pl.when(first_ref[g] == 1)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
     vals = val_ref[0, :].astype(jnp.float32)          # (T,)
-    prod = vals[:, None]                              # (T, 1) -> bcast to (T, R)
+    prod = vals[:, None]                              # (T, 1) -> bcast to (T, RB)
     for w in range(num_inputs):
         fac = factor_refs[w]
         idx_w = idx_ref[w, :]                         # (T,)
@@ -77,7 +83,7 @@ def _kernel(
                 preferred_element_type=jnp.float32,
             )
         else:
-            # Vector gather from the VMEM-resident factor matrix.
+            # Vector gather from the VMEM-resident factor block.
             fw = jnp.take(fac[...], idx_w, axis=0).astype(jnp.float32)
         prod = prod * fw                              # Hadamard accumulate (VREG)
 
@@ -101,10 +107,16 @@ def mttkrp_pallas(
     num_row_blocks: int,
     block_rows: int,
     tile: int,
+    rank_block: int | None = None,
     interpret: bool = True,
     gather_onehot_max: int = 2048,
 ) -> jnp.ndarray:
-    """Run the segmented MTTKRP kernel. Returns (num_row_blocks*block_rows, R) f32."""
+    """Run the segmented MTTKRP kernel. Returns (num_row_blocks*block_rows, R) f32.
+
+    ``rank_block`` tiles the rank dimension: each rank block re-streams the
+    slabs with only that block of factor/output columns in VMEM.  ``None``
+    (or >= R) keeps the whole rank resident — the original behavior.
+    """
     W = idx_packed.shape[0]
     if W != len(factors):
         raise ValueError(f"{W} index rows but {len(factors)} input factors")
@@ -112,21 +124,33 @@ def mttkrp_pallas(
     if idx_packed.shape[1] != G * tile:
         raise ValueError("packed arrays must have G*tile columns")
     R = factors[0].shape[1]
+    if rank_block is None or rank_block >= R:
+        rank_block = R
+    if rank_block < 1:
+        raise ValueError(f"rank_block must be >= 1, got {rank_block}")
+    num_rank_blocks = -(-R // rank_block)
+    R_pad = num_rank_blocks * rank_block
+    if R_pad != R:
+        # Zero-pad the rank dimension so it divides evenly; padded columns
+        # compute zeros and are sliced off below.
+        factors = [
+            jnp.pad(f, ((0, 0), (0, R_pad - R))) for f in factors
+        ]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(G,),
+        grid=(num_rank_blocks, G),
         in_specs=[
-            pl.BlockSpec((W, tile), lambda g, rb, fi: (0, g)),
-            pl.BlockSpec((1, tile), lambda g, rb, fi: (0, g)),
-            pl.BlockSpec((1, tile), lambda g, rb, fi: (0, g)),
+            pl.BlockSpec((W, tile), lambda r, g, rb, fi: (0, g)),
+            pl.BlockSpec((1, tile), lambda r, g, rb, fi: (0, g)),
+            pl.BlockSpec((1, tile), lambda r, g, rb, fi: (0, g)),
         ]
         + [
-            pl.BlockSpec(f.shape, lambda g, rb, fi: (0, 0))
+            pl.BlockSpec((f.shape[0], rank_block), lambda r, g, rb, fi: (0, r))
             for f in factors
         ],
         out_specs=pl.BlockSpec(
-            (block_rows, R), lambda g, rb, fi: (rb[g], 0)
+            (block_rows, rank_block), lambda r, g, rb, fi: (rb[g], r)
         ),
     )
     kernel = functools.partial(
@@ -137,11 +161,14 @@ def mttkrp_pallas(
         gather_onehot_max=gather_onehot_max,
     )
     out_shape = jax.ShapeDtypeStruct(
-        (num_row_blocks * block_rows, R), jnp.float32
+        (num_row_blocks * block_rows, R_pad), jnp.float32
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
     )(rb_of, first, idx_packed, vals_packed, lrows_packed, *factors)
+    if R_pad != R:
+        out = out[:, :R]
+    return out

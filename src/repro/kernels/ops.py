@@ -91,14 +91,14 @@ def pack_slabs(
 
     if nnz:
         vals_p = np.where(valid, values[src_c], 0).astype(np.float32)
-        idx_p = np.where(valid[:, :, None], input_indices[src_c], 0)
+        idx_p = np.where(valid[:, :, None], input_indices[src_c], 0).astype(np.int32)
         lrow_p = np.where(
             valid, rows[src_c] - slab_block[:, None] * block_rows, 0
-        )
+        ).astype(np.int32)
     else:
         vals_p = np.zeros((G, tile), np.float32)
         idx_p = np.zeros((G, tile, W), np.int32)
-        lrow_p = np.zeros((G, tile), np.int64)
+        lrow_p = np.zeros((G, tile), np.int32)
 
     pad = 1.0 - (nnz / float(G * tile)) if G else 0.0
     return PackedModeLayout(
@@ -145,40 +145,74 @@ def tile_candidates():
     return [(br, t) for br in (8, 32, 128, 256) for t in (64, 128, 256, 512)]
 
 
+def auto_rank_block(rank: int, block_rows: int, tile: int, factor_rows: int,
+                    num_inputs: int, *, vmem_budget: int = _VMEM_BYTES) -> int:
+    """Largest rank block whose VMEM working set (slabs + one output tile +
+    one column block of every input factor) fits ``vmem_budget``.
+
+    Returns ``rank`` when the whole rank fits (no tiling), else the widest
+    feasible block, preferring lane-aligned multiples of 128.  Returns 0
+    when even a single column cannot fit (slab arrays alone overflow).
+    """
+    fixed = (num_inputs + 2) * tile * 4
+    per_col = (block_rows + factor_rows) * 4
+    avail = vmem_budget - fixed
+    if avail < per_col:
+        return 0
+    max_cols = int(avail // per_col)
+    if max_cols >= rank:
+        return rank
+    if max_cols >= _MXU_DIM:
+        return (max_cols // _MXU_DIM) * _MXU_DIM
+    return max_cols
+
+
 def estimate_pack_cost(layout, block_rows: int, tile: int, rank: int,
-                       factor_rows: int) -> dict:
+                       factor_rows: int, *,
+                       vmem_budget: int = _VMEM_BYTES) -> dict:
     """Closed-form kernel cost for a (block_rows, tile) choice — no packing.
 
     slots      = sum over row blocks of ceil(len/tile)*tile  (incl. padding)
     mxu_factor = cost of the (tile x block_rows) scatter matmul relative to
                  a lane-saturated tile (block_rows < 128 wastes MXU columns;
                  block_rows > 128 adds proportional work)
-    vmem       = slabs + out block + resident factors; must fit 16 MiB
+    vmem       = slabs + one (row block, rank block) output tile + one rank
+                 block of the resident factors; when the full rank does not
+                 fit, the rank dimension is tiled (grid (R_blocks, G)) and
+                 every rank block re-streams the slabs, multiplying cost.
     """
     nb = max(1, -(-layout.num_rows // block_rows))
     row_ptr = layout.row_ptr
-    import numpy as _np
-
-    starts = row_ptr[_np.minimum(_np.arange(nb) * block_rows, layout.num_rows)]
-    ends = row_ptr[_np.minimum((_np.arange(nb) + 1) * block_rows,
-                               layout.num_rows)]
-    slabs = _np.maximum(1, -(-(ends - starts) // tile))
+    starts = row_ptr[np.minimum(np.arange(nb) * block_rows, layout.num_rows)]
+    ends = row_ptr[np.minimum((np.arange(nb) + 1) * block_rows,
+                              layout.num_rows)]
+    slabs = np.maximum(1, -(-(ends - starts) // tile))
     G = int(slabs.sum())
     slots = G * tile
     pad = 1.0 - layout.nnz / max(slots, 1)
     mxu_factor = max(block_rows, _MXU_DIM) / _MXU_DIM
     W = layout.nmodes - 1
-    vmem = (W + 2) * tile * 4 + block_rows * rank * 4 + factor_rows * rank * 4
-    cost = slots * mxu_factor + G * _STEP_OVERHEAD_SLOTS
+    rank_block = auto_rank_block(rank, block_rows, tile, factor_rows, W,
+                                 vmem_budget=vmem_budget)
+    num_rank_blocks = -(-rank // rank_block) if rank_block else 0
+    vmem = ((W + 2) * tile * 4
+            + (block_rows + factor_rows) * min(rank_block, rank) * 4)
+    cost = (slots * mxu_factor + G * _STEP_OVERHEAD_SLOTS) * max(
+        num_rank_blocks, 1)
     return {"block_rows": block_rows, "tile": tile, "grid": G,
             "pad_fraction": pad, "vmem": int(vmem),
-            "vmem_ok": vmem <= _VMEM_BYTES, "cost": float(cost)}
+            "rank_block": int(rank_block),
+            "num_rank_blocks": int(num_rank_blocks),
+            "vmem_ok": bool(rank_block >= 1 and vmem <= vmem_budget),
+            "cost": float(cost) if num_rank_blocks else float("inf")}
 
 
 def auto_tiles(layout, rank: int = 32, factor_rows: int | None = None):
     """Pick (block_rows, tile) minimizing the modeled kernel cost under the
     VMEM budget.  The default (128, 256) is good for dense-ish modes; skewed
-    or tiny modes prefer smaller row blocks (less slab padding)."""
+    or tiny modes prefer smaller row blocks (less slab padding).  Candidates
+    whose factors only fit via rank tiling are costed with the re-streaming
+    multiplier rather than rejected."""
     if factor_rows is None:
         factor_rows = sum(layout.shape[w] for w in layout.input_modes())
     best = None
@@ -188,7 +222,7 @@ def auto_tiles(layout, rank: int = 32, factor_rows: int | None = None):
             continue
         if best is None or c["cost"] < best["cost"]:
             best = c
-    if best is None:   # factors overflow VMEM: caller must block factors
+    if best is None:   # slab arrays alone overflow VMEM: nothing feasible
         best = estimate_pack_cost(layout, DEFAULT_BLOCK_ROWS, DEFAULT_TILE,
                                   rank, factor_rows)
     return best["block_rows"], best["tile"]
@@ -198,12 +232,23 @@ def mttkrp_packed(
     packed: PackedModeLayout,
     factors: Sequence[jnp.ndarray],
     *,
+    rank_block: int | None = None,
     interpret: bool = True,
     gather_onehot_max: int = 2048,
 ) -> jnp.ndarray:
     """Run the Pallas kernel on a packed layout.  ``factors`` are the input
     factor matrices in ``packed.input_modes`` order.  Returns the relabeled
-    (num_rows, R) f32 output (trailing padding rows stripped)."""
+    (num_rows, R) f32 output (trailing padding rows stripped).
+
+    ``rank_block=None`` auto-sizes the rank tile from the VMEM model: the
+    full rank stays resident when it fits, else the widest feasible column
+    block is used and the kernel makes one slab pass per rank block."""
+    if rank_block is None:
+        rank = int(factors[0].shape[1])
+        factor_rows = sum(int(f.shape[0]) for f in factors)
+        rank_block = auto_rank_block(
+            rank, packed.block_rows, packed.tile, factor_rows, len(factors)
+        ) or rank
     out = mttkrp_pallas(
         jnp.asarray(packed.rb_of),
         jnp.asarray(packed.first),
@@ -214,6 +259,7 @@ def mttkrp_packed(
         num_row_blocks=packed.num_row_blocks,
         block_rows=packed.block_rows,
         tile=packed.tile,
+        rank_block=rank_block,
         interpret=interpret,
         gather_onehot_max=gather_onehot_max,
     )

@@ -125,6 +125,8 @@ def _compile_costs(cfg, shape, mesh, *, quant_kv, microbatch,
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):   # older jax wraps the dict in a list
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), group_size=16)
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -263,6 +265,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         est = _extrapolate(c1, c2, L1, L2, L)
     else:
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older jax wraps it in a list
+            cost = cost[0] if cost else {}
         coll = parse_collectives(compiled.as_text(), group_size=16)
         est = {"flops": float(cost.get("flops", 0)),
                "bytes": float(cost.get("bytes accessed", 0)),

@@ -67,11 +67,13 @@ def init_block_cache(cfg, kind: str, batch: int, max_len: int, dtype, quant: boo
     return cache
 
 
-def block_apply(cfg, kind: str, p, x, *, cache=None, pos=None, window=0, q0=0):
+def block_apply(cfg, kind: str, p, x, *, cache=None, pos=None, window=0, q0=0,
+                train=True):
     """Apply one block.  Returns (x_out, new_cache, aux_loss).
 
     ``cache`` is this layer's slice (no 'pos'; the scalar position is
     passed separately so it can live once per segment, not per layer).
+    ``train=False`` switches MoE blocks to drop-free dense-eval dispatch.
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache: dict = {}
@@ -119,7 +121,7 @@ def block_apply(cfg, kind: str, p, x, *, cache=None, pos=None, window=0, q0=0):
     x = x + a
     h2 = apply_norm(cfg.norm, x, p["ln2"])
     if kind == "moe":
-        y, aux = mlp_mod.moe_apply(cfg, p["moe"], h2)
+        y, aux = mlp_mod.moe_apply(cfg, p["moe"], h2, train=train)
     else:
         y = mlp_mod.mlp_apply(cfg, p["mlp"], h2)
     x = x + y

@@ -157,7 +157,7 @@ class LM:
         # seq_act: optional Megatron-SP sharding of the residual stream
         return constrain(x, "batch", "seq_act", None), n_prefix
 
-    def _run_segments(self, params, x, *, caches=None, q0=0):
+    def _run_segments(self, params, x, *, caches=None, q0=0, train=False):
         cfg = self.cfg
         aux_total = jnp.zeros((), jnp.float32)
         new_caches: dict[str, Any] = {}
@@ -171,7 +171,7 @@ class LM:
             def one_layer(x, p, c, _seg=seg):
                 return blk.block_apply(
                     cfg, _seg.kind, p, x, cache=c, pos=pos,
-                    window=_seg.window, q0=q0,
+                    window=_seg.window, q0=q0, train=train,
                 )
 
             if cfg.remat != "none":
@@ -226,9 +226,9 @@ class LM:
         logits = x @ un.astype(x.dtype)
         return constrain(logits, "batch", None, "vocab")
 
-    def forward(self, params, tokens, *, prefix_embeds=None):
+    def forward(self, params, tokens, *, prefix_embeds=None, train=False):
         x, n_prefix = self._embed(params, tokens, prefix_embeds)
-        x, _, aux = self._run_segments(params, x)
+        x, _, aux = self._run_segments(params, x, train=train)
         logits = self._logits(params, x)
         return logits[:, n_prefix:], aux
 
@@ -239,7 +239,7 @@ class LM:
             # per-chunk logits are rematerialized in the backward (§Perf)
             x, n_prefix = self._embed(params, batch["tokens"],
                                       batch.get("prefix_embeds"))
-            x, _, aux = self._run_segments(params, x)
+            x, _, aux = self._run_segments(params, x, train=True)
             x = x[:, n_prefix:]
             labels = batch["labels"]
             C = cfg.loss_chunk
@@ -271,7 +271,8 @@ class LM:
             loss = ce + 0.01 * aux
             return loss, {"ce": ce, "aux": aux, "loss": loss}
         logits, aux = self.forward(
-            params, batch["tokens"], prefix_embeds=batch.get("prefix_embeds")
+            params, batch["tokens"], prefix_embeds=batch.get("prefix_embeds"),
+            train=True,
         )
         ce = softmax_cross_entropy(logits, batch["labels"])
         loss = ce + 0.01 * aux

@@ -67,7 +67,7 @@ def moe_specs(cfg) -> dict:
     }
 
 
-def moe_apply(cfg, p, x):
+def moe_apply(cfg, p, x, *, train=True):
     """x: (B, S, d) -> (B, S, d), plus load-balance aux loss (returned 2nd).
 
     Dispatch is PER BATCH ROW (group = sequence): sort, capacity and
@@ -76,11 +76,17 @@ def moe_apply(cfg, p, x):
     GEMM (a globally-sorted dispatch forces GSPMD to all-gather the whole
     token set and replicate expert compute across the data axis; measured
     5x FLOP inflation in the dry run — see EXPERIMENTS.md §Perf).
+
+    ``train=False`` (eval/serving) takes the dispatch-free dense path:
+    capacity dropping depends on the surrounding sequence (which tokens
+    share an expert), so a capacity-dropped token would decode differently
+    than it forwards — inference must be drop-free for decode/forward
+    parity.
     """
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.num_experts_per_tok
 
-    if getattr(cfg, "moe_dense_eval", False):
+    if not train or getattr(cfg, "moe_dense_eval", False):
         return _moe_dense_eval(cfg, p, x)
 
     logits = x.astype(jnp.float32) @ p["router"]              # (B, S, E)

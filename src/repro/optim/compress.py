@@ -14,7 +14,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # older jax keeps shard_map under experimental
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 

@@ -1,3 +1,3 @@
-from .trainer import StragglerMonitor, Trainer
+from .trainer import ALSRunner, StragglerMonitor, Trainer
 
-__all__ = ["StragglerMonitor", "Trainer"]
+__all__ = ["ALSRunner", "StragglerMonitor", "Trainer"]

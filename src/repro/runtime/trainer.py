@@ -28,6 +28,8 @@ import jax.numpy as jnp
 
 from .. import optim
 from ..checkpoint.manager import CheckpointManager
+from ..core.coo import SparseTensor
+from ..core.cpd import CPDResult
 from ..launch import shardings as shd
 from ..launch import steps as steps_mod
 
@@ -59,6 +61,55 @@ class StragglerMonitor:
         return flagged
 
 
+class ALSRunner:
+    """Decomposition-as-a-service: serve CPD requests through the
+    device-resident fused ALS engine.
+
+    The serving pattern the fused engine is built for: many tensors of the
+    same shape family arrive over time; the first request per (shape, rank,
+    backend) compiles the sweep, every later one reuses the executable
+    (see ``core.als_device`` — zero retrace).  Each request's wall time
+    feeds the same ``StragglerMonitor`` the trainer uses, so a slow
+    decomposition (retrace, contended host, pathological tensor) is flagged
+    exactly like a slow training step.
+    """
+
+    def __init__(self, rank: int, *, kappa: int = 1, backend: str = "segment",
+                 engine: str = "fused", check_every: int = 4,
+                 monitor: StragglerMonitor | None = None):
+        self.rank = rank
+        self.kappa = kappa
+        self.backend = backend
+        self.engine = engine
+        self.check_every = check_every
+        self.monitor = monitor or StragglerMonitor()
+        self.history: list[dict] = []
+
+    def decompose(self, tensor: SparseTensor, *, n_iters: int = 25,
+                  tol: float = 1e-5, seed: int = 0, verbose: bool = False,
+                  log: Callable[[str], None] = print) -> CPDResult:
+        from ..core.cpd import cpd_als
+
+        t0 = time.perf_counter()
+        res = cpd_als(
+            tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
+            seed=seed, backend=self.backend, engine=self.engine,
+            check_every=self.check_every, verbose=verbose,
+        )
+        dt = time.perf_counter() - t0
+        req = len(self.history) + 1
+        flagged = self.monitor.observe(req, dt)
+        rec = {"request": req, "shape": tuple(tensor.shape),
+               "nnz": tensor.nnz, "fit": res.fits[-1] if res.fits else 0.0,
+               "iters": res.iters, "host_syncs": res.host_syncs,
+               "time_s": dt, "straggler": flagged}
+        self.history.append(rec)
+        if flagged:
+            log(f"[als] request {req} STRAGGLER: {dt*1e3:.0f} ms "
+                f"(mean {self.monitor.mean*1e3:.0f} ms)")
+        return res
+
+
 class Trainer:
     def __init__(self, model, *, mesh, pipeline, opt_cfg=None,
                  ckpt_dir: str | None = None, ckpt_every: int = 50,
@@ -81,6 +132,10 @@ class Trainer:
         self._jitted = jax.jit(
             step_fn,
             in_shardings=(self.p_shard, self.o_shard, None),
+            # Pin outputs to the same shardings: without this the compiler
+            # may choose different ones, and the donated second-step inputs
+            # then mismatch in_shardings.
+            out_shardings=(self.p_shard, self.o_shard, None),
             donate_argnums=(0, 1),
         )
         self.params = None

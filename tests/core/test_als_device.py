@@ -1,0 +1,106 @@
+"""Device-resident fused ALS engine vs the host loop: trajectory
+equivalence, sync counting, executable-cache reuse, engine delegation."""
+import numpy as np
+import pytest
+
+from repro.core import (cpd_als, cpd_als_fused, random_sparse,
+                        sweep_cache_stats)
+
+
+@pytest.mark.parametrize("shape,nnz,R", [
+    ((25, 18, 12), 800, 4),            # 3-mode
+    ((16, 12, 10, 8), 600, 5),         # 4-mode
+])
+@pytest.mark.parametrize("backend", ["segment", "pallas", "coo"])
+def test_fused_matches_host_trajectory(shape, nnz, R, backend):
+    """Same seed => fused (f32 on-device solve) and host (f64 numpy solve)
+    produce the same fit trajectory to 1e-4."""
+    t = random_sparse(shape, nnz, seed=2, distribution="powerlaw")
+    host = cpd_als(t, rank=R, n_iters=4, kappa=4, tol=-1.0,
+                   backend=backend, engine="host")
+    fused = cpd_als_fused(t, rank=R, n_iters=4, kappa=4, tol=-1.0,
+                          backend=backend)
+    assert host.engine == "host" and fused.engine == "fused"
+    np.testing.assert_allclose(fused.fits, host.fits, rtol=1e-4, atol=1e-4)
+    for Fh, Ff in zip(host.factors, fused.factors):
+        assert Fh.shape == Ff.shape
+
+
+def test_fused_host_sync_budget():
+    """<= 1 host sync per check_every iterations (+1 final materialization)."""
+    t = random_sparse((30, 20, 15), 1000, seed=3, distribution="powerlaw")
+    res = cpd_als_fused(t, rank=4, n_iters=8, kappa=4, tol=-1.0,
+                        check_every=4)
+    assert res.iters == 8
+    assert res.host_syncs <= 8 // 4 + 1
+    # host loop for the same run syncs every mode of every iteration
+    host = cpd_als(t, rank=4, n_iters=8, kappa=4, tol=-1.0, engine="host")
+    assert host.host_syncs >= 8 * t.nmodes
+
+
+def test_fused_sweep_cache_reused_across_same_shape_tensors():
+    """Second decomposition of a same-shape tensor must not rebuild the
+    jitted sweep (zero retrace for the serving scenario)."""
+    t1 = random_sparse((22, 14, 9), 500, seed=4)
+    t2 = random_sparse((22, 14, 9), 500, seed=5)
+    cpd_als_fused(t1, rank=3, n_iters=2, kappa=2, tol=-1.0)
+    before = sweep_cache_stats()
+    cpd_als_fused(t2, rank=3, n_iters=2, kappa=2, tol=-1.0)
+    after = sweep_cache_stats()
+    assert after["currsize"] == before["currsize"]
+    assert after["hits"] == before["hits"] + 1
+
+
+def test_cpd_als_delegates_to_fused_by_default():
+    t = random_sparse((20, 12, 8), 400, seed=6)
+    res = cpd_als(t, rank=3, n_iters=3, kappa=2, tol=-1.0)
+    assert res.engine == "fused"
+    # custom mttkrp_fn forces the host loop
+    from repro.core import make_plan, mttkrp
+
+    res2 = cpd_als(t, rank=3, n_iters=3, kappa=2, tol=-1.0,
+                   mttkrp_fn=lambda plan, factors, mode: mttkrp(
+                       plan, factors, mode, backend="segment"))
+    assert res2.engine == "host"
+    np.testing.assert_allclose(res.fits, res2.fits, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_convergence_break_matches_host():
+    """With check_every=1 the fused engine stops at the same iteration."""
+    t = random_sparse((18, 14, 10), 600, seed=7)
+    host = cpd_als(t, rank=3, n_iters=20, kappa=2, tol=1e-4, engine="host")
+    fused = cpd_als_fused(t, rank=3, n_iters=20, kappa=2, tol=1e-4,
+                          check_every=1)
+    assert abs(host.iters - fused.iters) <= 1   # f32-vs-f64 fit jitter
+    np.testing.assert_allclose(fused.fits[-1], host.fits[-1], atol=1e-3)
+
+
+def test_als_runner_serves_repeated_requests():
+    """Runtime integration: ALSRunner routes through the fused engine and
+    records per-request latency/sync stats."""
+    from repro.runtime import ALSRunner
+
+    runner = ALSRunner(rank=3, kappa=2, check_every=2)
+    for seed in (0, 1, 2):
+        t = random_sparse((20, 12, 8), 400, seed=seed)
+        res = runner.decompose(t, n_iters=4, tol=-1.0)
+        assert res.engine == "fused"
+    assert len(runner.history) == 3
+    assert all(r["host_syncs"] <= 4 // 2 + 1 for r in runner.history)
+
+
+def test_fused_exact_recovery():
+    """The fused engine recovers an exactly low-rank tensor like the host."""
+    import itertools
+
+    from repro.core.coo import SparseTensor
+
+    rng = np.random.default_rng(0)
+    shape, R = (12, 10, 8), 3
+    F = [rng.standard_normal((I, R)).astype(np.float32) for I in shape]
+    dense = np.einsum("ir,jr,kr->ijk", *F)
+    idx = np.array(list(itertools.product(*[range(s) for s in shape])),
+                   dtype=np.int32)
+    t = SparseTensor(idx, dense.reshape(-1).astype(np.float32), shape)
+    res = cpd_als_fused(t, rank=R, n_iters=50, kappa=4, tol=1e-9)
+    assert res.fits[-1] > 0.999

@@ -2,7 +2,12 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests fall back to fixed examples
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (Scheme, low_rank_sparse, make_plan, mttkrp,
                         mttkrp_dense_ref, random_sparse)
@@ -43,15 +48,7 @@ def test_forced_schemes_agree(scheme):
         np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    st.integers(3, 4).flatmap(
-        lambda n: st.tuples(*[st.integers(3, 24) for _ in range(n)])),
-    st.integers(10, 200),
-    st.integers(1, 12),
-    st.integers(1, 6),
-)
-def test_property_matches_dense(shape, nnz, kappa, R):
+def _matches_dense_case(shape, nnz, kappa, R):
     """For arbitrary small tensors, every mode's MTTKRP equals the dense
     matricization @ Khatri-Rao product."""
     t = random_sparse(shape, min(nnz, int(np.prod(shape))), seed=7)
@@ -63,9 +60,7 @@ def test_property_matches_dense(shape, nnz, kappa, R):
         np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 2), st.floats(-2.0, 2.0), st.integers(0, 10_000))
-def test_property_linearity_in_values(mode, alpha, seed):
+def _linearity_case(mode, alpha, seed):
     """MTTKRP(alpha * X) == alpha * MTTKRP(X) (linearity in tensor values)."""
     t = random_sparse((20, 15, 10), 300, seed=seed % 97)
     from repro.core.coo import SparseTensor
@@ -76,9 +71,7 @@ def test_property_linearity_in_values(mode, alpha, seed):
     np.testing.assert_allclose(out2, alpha * out1, rtol=1e-3, atol=1e-3)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(0, 10_000))
-def test_property_nnz_permutation_invariance(seed):
+def _permutation_invariance_case(seed):
     """The COO nnz ordering must not affect the result (the mode-specific
     layout re-sorts internally)."""
     t = random_sparse((25, 12, 18), 400, seed=11)
@@ -90,3 +83,42 @@ def test_property_nnz_permutation_invariance(seed):
         a = np.asarray(mttkrp(make_plan(t, 5), factors, d))
         b = np.asarray(mttkrp(make_plan(tp, 5), factors, d))
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(3, 4).flatmap(
+            lambda n: st.tuples(*[st.integers(3, 24) for _ in range(n)])),
+        st.integers(10, 200),
+        st.integers(1, 12),
+        st.integers(1, 6),
+    )
+    def test_property_matches_dense(shape, nnz, kappa, R):
+        _matches_dense_case(shape, nnz, kappa, R)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2), st.floats(-2.0, 2.0), st.integers(0, 10_000))
+    def test_property_linearity_in_values(mode, alpha, seed):
+        _linearity_case(mode, alpha, seed)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10_000))
+    def test_property_nnz_permutation_invariance(seed):
+        _permutation_invariance_case(seed)
+else:
+    @pytest.mark.parametrize("shape,nnz,kappa,R", [
+        ((5, 7, 9), 60, 3, 4), ((4, 4, 4, 4), 120, 6, 2),
+        ((24, 3, 11), 200, 12, 6),
+    ])
+    def test_property_matches_dense(shape, nnz, kappa, R):
+        _matches_dense_case(shape, nnz, kappa, R)
+
+    @pytest.mark.parametrize("mode,alpha,seed",
+                             [(0, 1.5, 0), (1, -2.0, 42), (2, 0.0, 7)])
+    def test_property_linearity_in_values(mode, alpha, seed):
+        _linearity_case(mode, alpha, seed)
+
+    @pytest.mark.parametrize("seed", [0, 123, 9999])
+    def test_property_nnz_permutation_invariance(seed):
+        _permutation_invariance_case(seed)

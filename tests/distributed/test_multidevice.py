@@ -110,8 +110,8 @@ def test_compressed_crosspod_mean_matches_exact():
     out = run_py("""
         import numpy as np, jax, jax.numpy as jnp
         from repro.optim.compress import cross_pod_mean
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4,), ("pod",))
         rng = np.random.default_rng(0)
         g = {"w": jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))}
         err = {"w": jnp.zeros((32, 16))}
@@ -143,6 +143,7 @@ def test_train_step_shards_on_2d_mesh():
         o_shard = shd.opt_state_shardings(p_shard, mesh)
         step = steps_mod.make_train_step(model, optim.AdamWConfig(lr=3e-3, warmup_steps=1, total_steps=50))
         jitted = jax.jit(step, in_shardings=(p_shard, o_shard, None),
+                         out_shardings=(p_shard, o_shard, None),
                          donate_argnums=(0, 1))
         with mesh:
             params = jax.jit(model.init, out_shardings=p_shard)(jax.random.PRNGKey(0))

@@ -97,6 +97,49 @@ def test_empty_row_blocks():
     assert np.all(pal[1:63] == 0)
 
 
+def test_rank_blocked_kernel():
+    """Rank tiling (grid (R_blocks, G)) is exact: bit-identical to the
+    single-block kernel (columns are independent), and matches the packed
+    oracle to f32 rounding, including when R does not divide rank_block."""
+    t = random_sparse((96, 40, 24), 1500, seed=21, distribution="powerlaw")
+    R = 40                      # rank_block=16 -> 3 blocks, padded to 48
+    factors = _factors(t.shape, R, seed=22)
+    plan = make_plan(t, kappa=4, block_rows=16, tile=64)
+    for mode in range(t.nmodes):
+        packed = plan.packed(mode)
+        in_f = [factors[w] for w in plan.layouts[mode].input_modes()]
+        blocked = np.asarray(kops.mttkrp_packed(packed, in_f, rank_block=16))
+        full = np.asarray(kops.mttkrp_packed(packed, in_f))
+        ref = np.asarray(kops.mttkrp_packed_ref(packed, in_f))
+        np.testing.assert_array_equal(blocked, full)
+        np.testing.assert_allclose(blocked, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_rank_block_forced_by_vmem_budget():
+    """auto_rank_block tiles the rank when factors overflow the budget, and
+    the auto path through mttkrp_packed stays correct."""
+    # Factors far larger than 16 MiB of f32 columns: must tile below R.
+    rb = kops.auto_rank_block(64, 128, 256, factor_rows=10**6, num_inputs=2)
+    assert 1 <= rb < 64
+    assert -(-64 // rb) >= 2
+    # Whole rank fits -> no tiling.
+    assert kops.auto_rank_block(64, 128, 256, 200, 2) == 64
+    # estimate_pack_cost reports the tiling and scales cost by the passes.
+    t = random_sparse((64, 32, 16), 800, seed=23)
+    plan = make_plan(t, kappa=2, block_rows=16, tile=64)
+    lay = plan.layouts[0]
+    small = kops.estimate_pack_cost(lay, 16, 64, 32, 48,
+                                    vmem_budget=4096)
+    big = kops.estimate_pack_cost(lay, 16, 64, 32, 48)
+    assert small["num_rank_blocks"] > big["num_rank_blocks"] == 1
+    assert small["vmem_ok"] and small["cost"] > big["cost"]
+    # End-to-end through the mttkrp wrapper with an explicit small block.
+    factors = _factors(t.shape, 32, seed=24)
+    a = np.asarray(mttkrp(plan, factors, 0, backend="pallas", rank_block=8))
+    b = np.asarray(mttkrp(plan, factors, 0, backend="segment"))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
 def test_auto_tiles_valid_and_correct():
     """auto_tiles picks a VMEM-feasible tiling; the kernel stays exact."""
     t = random_sparse((512, 64, 16), 3000, seed=11, distribution="powerlaw")

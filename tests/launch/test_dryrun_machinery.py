@@ -11,6 +11,7 @@ import jax
 
 from repro.launch.hlo_analysis import (_shape_bytes, parse_collectives,
                                        roofline_terms)
+from repro.launch import mesh as mesh_mod
 from repro.launch.mesh import HW
 from repro.models import common as mcommon
 
@@ -55,8 +56,7 @@ def test_roofline_terms_dominance():
 
 
 def test_resolve_pspec_rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_mod.make_mesh((1, 1), ("data", "model"))
     mcommon.reset_rules()
     # divisible -> sharded; non-divisible -> dropped; duplicates -> dropped
     spec = mcommon.resolve_pspec(("fsdp", "tensor"), (16, 16), mesh)
@@ -68,8 +68,7 @@ def test_resolve_pspec_rules():
 
 
 def test_resolve_pspec_divisibility():
-    mesh = jax.make_mesh((1,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = mesh_mod.make_mesh((1,), ("model",))
     import jax.sharding as js
     mcommon.reset_rules()
     # 24 heads on 16-way axis would not divide on a real 16-mesh; emulate
@@ -90,8 +89,7 @@ def test_small_mesh_dryrun_end_to_end():
         def small_mesh(*, multi_pod=False):
             shape = (2, 2, 2) if multi_pod else (4, 2)
             axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-            return jax.make_mesh(shape, axes,
-                                 axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            return mesh_mod.make_mesh(shape, axes)
         dr.make_production_mesh = small_mesh
         import dataclasses
         from repro.configs import get_config, reduce_config

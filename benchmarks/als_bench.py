@@ -39,7 +39,11 @@ def bench_one(name, tensor, *, rank=RANK, iters=ITERS,
                    engine="host")
     host_s = time.perf_counter() - t0
 
-    cpd_als_fused(tensor, rank, plan=plan, n_iters=1, tol=-1.0)
+    # Warm-up must use the same check window: the scan block length is part
+    # of the executable key, so warming with n_iters=1 would leave the
+    # window-`check_every` executable to compile inside the timed region.
+    cpd_als_fused(tensor, rank, plan=plan, n_iters=check_every, tol=-1.0,
+                  check_every=check_every)
     t0 = time.perf_counter()
     fused = cpd_als_fused(tensor, rank, plan=plan, n_iters=iters, tol=-1.0,
                           check_every=check_every)

@@ -35,6 +35,13 @@ def main() -> None:
     if on("als"):
         from . import als_bench
         sections.append(("ALS engine (fused device-resident vs host loop)", als_bench.main))
+    if on("serve"):
+        from . import serve_bench
+        # own argv: the runner's section args must not leak into
+        # serve_bench's argparse, and its timing-dependent acceptance
+        # assertions must not abort the remaining sections
+        sections.append(("serving (batched service vs sequential runner)",
+                         lambda: serve_bench.main(["--no-check"])))
     if on("roofline"):
         from . import roofline
         sections.append(("roofline table (from dry-run)", roofline.main))

@@ -1,0 +1,180 @@
+"""Serving benchmark: batched decomposition service vs sequential runner.
+
+Streams of Table-3-style requests (same shape family, nnz in one or a few
+buckets — the serving scenario the fused engine was built for) are pushed
+through both front doors:
+
+  * sequential — ``ALSRunner(mode="sequential")``: one fused decomposition
+    per request, executable reuse across the stream, but every request
+    pays its own dispatch chain and result materialization.
+  * batched    — the ``repro.serve`` service: requests are bucketed,
+    padded, stacked B-high, and each ``check_every`` window of the whole
+    batch is ONE vmapped dispatch.
+
+Reported per stream: decompositions/sec for both paths, the throughput
+ratio, padding overhead, batch occupancy, p50/p99 latency, and the
+executable-cache hit rate.  Two stream flavors:
+
+  * ``uniform`` — constant nnz: sequential gets full executable reuse,
+    so the ratio isolates the pure batching win;
+  * ``jitter``  — nnz varies a few % request-to-request: the sequential
+    path retraces per distinct nnz while the bucketed service pads every
+    request into a shared executable — the bucketing win on top.
+
+``--smoke`` shrinks everything for CI; the full run asserts the
+acceptance bar (batched >= 2x sequential at B >= 8, padding < 15%).
+
+Output: ``name,us_per_call,derived`` CSV like the other sections.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import random_sparse
+from repro.runtime import ALSRunner
+from repro.serve import BucketPolicy, DecompositionService
+
+# Small rank + few-hundred nnz is the paper's overhead-dominated serving
+# regime: one decomposition is mostly dispatch/transfer overhead, which is
+# exactly what the batch amortizes.  (On a real accelerator the batch also
+# parallelizes the compute; on CPU vmap serializes it, so these numbers
+# are a lower bound on the batching win.)
+RANK = 8
+N_ITERS = 5
+CHECK_EVERY = 5
+MAX_BATCH = 8
+
+# Small-tensor request classes: mode-count / dimension ratios follow
+# Table-3 datasets (chicago 4-mode with tiny inner modes, uber 4-mode,
+# nips-like 3-mode), nnz scaled to the overhead-dominated regime.
+STREAM_SHAPES = {
+    "chicago-like": ((128, 24, 77, 32), 500),
+    "uber-like": ((60, 24, 160, 200), 500),
+    "nips-like": ((180, 200, 400), 500),
+}
+
+
+def make_stream(shape, base_nnz, m, *, jitter=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(m):
+        nnz = int(base_nnz * (1.0 - jitter * rng.random()))
+        out.append(random_sparse(shape, nnz, seed=1000 + i,
+                                 distribution="powerlaw"))
+    return out
+
+
+def bench_stream(name, stream, *, rank, n_iters, check_every, backend,
+                 max_batch) -> dict:
+    # -- sequential front door --------------------------------------------
+    seq = ALSRunner(rank, backend=backend, mode="sequential",
+                    check_every=check_every)
+    seq.decompose(stream[0], n_iters=n_iters, tol=-1.0)        # warm-up
+    t0 = time.perf_counter()
+    for t in stream:
+        seq.decompose(t, n_iters=n_iters, tol=-1.0)
+    seq_s = time.perf_counter() - t0
+
+    # -- batched service ---------------------------------------------------
+    svc = DecompositionService(rank, backend=backend,
+                               check_every=check_every, max_batch=max_batch,
+                               max_wait_s=1e9)
+    # warm-up: compile each (bucket, B, window) class the stream will touch
+    # with the SAME n_iters the timed run uses (window sizes are part of
+    # the executable key)
+    policy = svc.scheduler.policy
+    for cap in sorted({policy.bucket_for(t).nnz_cap for t in stream}):
+        grp = [t for t in stream if policy.bucket_for(t).nnz_cap == cap]
+        svc.engine.decompose_batch(grp[:max_batch], n_iters=n_iters,
+                                   tol=-1.0,
+                                   seeds=list(range(len(grp[:max_batch]))),
+                                   nnz_cap=cap)
+    t0 = time.perf_counter()
+    futs = [svc.submit(t, n_iters=n_iters, tol=-1.0) for t in stream]
+    svc.drain()
+    for f in futs:
+        f.result()
+    bat_s = time.perf_counter() - t0
+    snap = svc.snapshot()
+
+    m = len(stream)
+    return {
+        "stream": name,
+        "requests": m,
+        "seq_rps": m / seq_s,
+        "bat_rps": m / bat_s,
+        "speedup": seq_s / max(bat_s, 1e-12),
+        "padding_overhead": snap["padding_overhead"],
+        "batch_occupancy": snap["batch_occupancy"],
+        "latency_p50_s": snap["latency_p50_s"],
+        "latency_p99_s": snap["latency_p99_s"],
+        "cache_hit_rate": snap["cache_hit_rate"],
+        "batches": snap["batches"],
+    }
+
+
+def run(*, smoke=False, backend="segment", max_batch=MAX_BATCH,
+        rank=RANK) -> list[dict]:
+    m = max_batch * (1 if smoke else 3)
+    n_iters = 3 if smoke else N_ITERS
+    rows = []
+    shapes = dict(list(STREAM_SHAPES.items())[:1] if smoke
+                  else STREAM_SHAPES.items())
+    for name, (shape, nnz) in shapes.items():
+        for flavor, jitter in (("uniform", 0.0), ("jitter", 0.05)):
+            stream = make_stream(shape, nnz, m, jitter=jitter)
+            rows.append(bench_stream(
+                f"{name}/{flavor}", stream, rank=rank, n_iters=n_iters,
+                check_every=CHECK_EVERY, backend=backend,
+                max_batch=max_batch))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny stream for CI (no acceptance assertions)")
+    ap.add_argument("--no-check", action="store_true",
+                    help="report only; skip the wall-clock acceptance "
+                         "assertions (used by the aggregate benchmarks.run "
+                         "so a loaded box cannot abort later sections)")
+    ap.add_argument("--backend", default="segment",
+                    choices=["segment", "coo"])
+    ap.add_argument("--max-batch", type=int, default=MAX_BATCH)
+    ap.add_argument("--rank", type=int, default=RANK)
+    args = ap.parse_args(argv)
+
+    rows = run(smoke=args.smoke, backend=args.backend,
+               max_batch=args.max_batch, rank=args.rank)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"serve/{r['stream']}/sequential,"
+              f"{1e6/max(r['seq_rps'],1e-12):.0f},"
+              f"rps={r['seq_rps']:.2f}")
+        print(f"serve/{r['stream']}/batched-B{args.max_batch},"
+              f"{1e6/max(r['bat_rps'],1e-12):.0f},"
+              f"rps={r['bat_rps']:.2f};speedup={r['speedup']:.2f}x;"
+              f"pad={r['padding_overhead']*100:.1f}%;"
+              f"occ={r['batch_occupancy']*100:.0f}%;"
+              f"p50={r['latency_p50_s']*1e3:.0f}ms;"
+              f"p99={r['latency_p99_s']*1e3:.0f}ms;"
+              f"cache_hit={r['cache_hit_rate']*100:.0f}%")
+    gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
+    worst_pad = max(r["padding_overhead"] for r in rows)
+    print(f"serve/geomean-speedup,0,{gmean:.2f}x")
+    print(f"serve/max-padding-overhead,0,{worst_pad*100:.1f}%")
+
+    if not args.smoke and not args.no_check and args.max_batch >= 8:
+        # Acceptance: batched >= 2x sequential on a Table-3-style
+        # same-shape stream, padding < 15% under the default policy.
+        best = max(r["speedup"] for r in rows)
+        assert gmean >= 2.0, f"batched speedup {gmean:.2f}x < 2x"
+        assert best >= 2.0, f"best stream speedup {best:.2f}x < 2x"
+        assert worst_pad < 0.15, f"padding overhead {worst_pad:.2%} >= 15%"
+
+
+if __name__ == "__main__":
+    main()

@@ -12,15 +12,24 @@ a single jit-compiled function with device-carried state:
 
   * factors / grams / weights never leave the device between iterations;
     the state pytree is donated so XLA reuses the buffers in place.
-  * the sparse fit (<X, X_hat> over nnz + the gram-product model norm) is
+  * the ``check_every`` iterations between convergence checks run as ONE
+    dispatch: a ``lax.scan`` over the sweep body, so the host pays a
+    single call per check window instead of one per iteration.  The
+    sparse fit (<X, X_hat> over nnz + the gram-product model norm) is
     computed on device every sweep; the host only *fetches* it at the
-    configurable every-``check_every``-iterations convergence check, so
-    host syncs drop from 2·N per iteration to 1/k (+1 final
-    materialization).  ``CPDResult.host_syncs`` records the actual count.
-  * compiled sweeps are cached per (backend, nmodes, rank, shapes, pallas
-    tiling): repeated decompositions of same-shape tensors — the serving
-    scenario — pay zero retrace.  ``sweep_cache_stats()`` exposes the
-    hit/miss counters.
+    window boundary, so host syncs drop from 2·N per iteration to 1/k
+    (+1 final materialization).  ``CPDResult.host_syncs`` records the
+    actual count.
+  * compiled sweep blocks are cached per (backend, nmodes, rank, shapes,
+    pallas tiling, block length): repeated decompositions of same-shape
+    tensors — the serving scenario — pay zero retrace.
+    ``sweep_cache_stats()`` exposes the hit/miss counters.
+
+The sweep body itself is *closure-free over tensor data*: runtime arrays
+(layout copies, nnz coordinates, fit data) are arguments, never captured
+constants.  That is what lets ``repro.serve.batched_engine`` stack B
+same-bucket tensors and ``jax.vmap`` the identical sweep into one
+batched dispatch (see ``build_sweep_fn``).
 
 ``core.cpd.cpd_als`` delegates here by default (``engine="fused"``); the
 original host loop survives as ``engine="host"`` for benchmarking.
@@ -57,18 +66,24 @@ def _pinv(a):
 
 
 # ---------------------------------------------------------------------------
-# Compiled-sweep cache
+# Closure-free sweep builder (shared by the sequential and batched engines)
 # ---------------------------------------------------------------------------
 
 
 @functools.lru_cache(maxsize=None)
-def _build_sweep(backend: str, nmodes: int, rank: int,
-                 shapes: tuple[int, ...],
-                 pallas_meta: tuple | None,
-                 interpret: bool, donate: bool, solver: str):
-    """Build (and cache) the jitted one-full-sweep function for a static
-    configuration.  Runtime data (layout arrays, nnz coordinates) are
-    arguments, so every same-shape decomposition reuses the executable."""
+def build_sweep_fn(backend: str, nmodes: int, rank: int,
+                   shapes: tuple[int, ...],
+                   pallas_meta: tuple | None,
+                   interpret: bool, solver: str):
+    """Build (and cache) the *pure* one-full-sweep function for a static
+    configuration: ``sweep(state, mode_data_all, fit_data) -> (state, fit)``.
+
+    All runtime data (layout arrays, nnz coordinates, fit inputs) are
+    arguments — the function closes over nothing but static ints — so it
+    can be jitted directly (sequential engine) or ``jax.vmap``-ed over a
+    stacked leading axis (``serve.batched_engine``): every tensor of the
+    same (shape, nnz-bucket) class shares this one function object.
+    """
     in_modes = [tuple(w for w in range(nmodes) if w != d)
                 for d in range(nmodes)]
 
@@ -119,7 +134,9 @@ def _build_sweep(backend: str, nmodes: int, rank: int,
             else:
                 Yd = M @ jnp.linalg.inv(Vr)
             # lax.cond (not jnp.where) so the SVD-based pinv only runs on
-            # the rare singular miss, never in the hot path.
+            # the rare singular miss, never in the hot path.  (Under vmap
+            # the cond lowers to a select and both branches run — the
+            # batched engine pays the small-R SVD for robustness.)
             Yd = lax.cond(
                 jnp.all(jnp.isfinite(Yd)),
                 lambda yd, m, v: yd,
@@ -135,6 +152,8 @@ def _build_sweep(backend: str, nmodes: int, rank: int,
 
         # Sparse fit, on device (jnp ports of cpd._innerprod_sparse /
         # cpd._model_norm_sq): no dense reconstruction, no host round-trip.
+        # Zero-valued padding entries (serve.buckets) contribute exactly
+        # +0.0 to both the Hadamard accumulation and the inner product.
         indices, values, norm_x_sq = fit_data
         acc = jnp.ones((values.shape[0], rank), jnp.float32)
         for d in range(nmodes):
@@ -149,13 +168,43 @@ def _build_sweep(backend: str, nmodes: int, rank: int,
             jnp.sqrt(norm_x_sq), 1e-12)
         return (tuple(factors), tuple(grams), weights), fit
 
-    return jax.jit(sweep, donate_argnums=(0,) if donate else ())
+    return sweep
+
+
+# ---------------------------------------------------------------------------
+# Compiled sweep-block cache (lax.scan over one check window)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _build_sweep_block(backend: str, nmodes: int, rank: int,
+                       shapes: tuple[int, ...],
+                       pallas_meta: tuple | None,
+                       interpret: bool, donate: bool, solver: str,
+                       block: int):
+    """Jitted ``lax.scan`` of ``block`` consecutive sweeps: the whole
+    check window is ONE dispatch.  Returns the carried state plus the
+    per-iteration fit vector ``(block,)`` so the fit history stays
+    complete."""
+    sweep = build_sweep_fn(backend, nmodes, rank, shapes, pallas_meta,
+                           interpret, solver)
+
+    def run_block(state, mode_data_all, fit_data):
+        def body(st, _):
+            return sweep(st, mode_data_all, fit_data)
+
+        state, fits = lax.scan(body, state, xs=None, length=block)
+        return state, fits
+
+    return jax.jit(run_block, donate_argnums=(0,) if donate else ())
 
 
 def sweep_cache_stats():
-    """(hits, misses, currsize) of the compiled-sweep cache — the probe for
-    'repeated same-shape decompositions pay zero retrace'."""
-    info = _build_sweep.cache_info()
+    """(hits, misses, currsize) of the compiled sweep-block cache — the
+    probe for 'repeated same-shape decompositions pay zero retrace'.
+    ``runtime.ALSRunner`` records the per-request delta so retrace-induced
+    stragglers are distinguishable from contention stragglers."""
+    info = _build_sweep_block.cache_info()
     return {"hits": info.hits, "misses": info.misses,
             "currsize": info.currsize}
 
@@ -186,6 +235,30 @@ def _collect_mode_data(plan: MTTKRPPlan, backend: str, rank: int):
     raise ValueError(f"unknown backend {backend!r}")
 
 
+def init_state_host(tensor_shape, rank: int, seed: int):
+    """Host-side (pure numpy) random init shared by every engine: same
+    seed => same starting point for the host loop, the fused engine, and
+    the batched engine.  Kept on host so the serving path can stack B of
+    these and upload ONE array per state leaf instead of paying 2N+1 tiny
+    transfers plus N gram matmul dispatches per tensor."""
+    rng = np.random.default_rng(seed)
+    factors = tuple(
+        rng.standard_normal((I, rank)).astype(np.float32)
+        for I in tensor_shape
+    )
+    grams = tuple(F.T @ F for F in factors)
+    weights = np.ones((rank,), np.float32)
+    return (factors, grams, weights)
+
+
+def init_state(tensor_shape, rank: int, seed: int):
+    """Device-resident init for the sequential fused engine."""
+    factors, grams, weights = init_state_host(tensor_shape, rank, seed)
+    return (tuple(jnp.asarray(F) for F in factors),
+            tuple(jnp.asarray(G) for G in grams),
+            jnp.asarray(weights))
+
+
 # ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
@@ -209,22 +282,13 @@ def cpd_als_fused(
 ) -> CPDResult:
     """Device-resident CPD-ALS.  Same initialization and update order as the
     host-loop ``cpd_als`` (identical seed ⇒ matching trajectories up to f32
-    vs f64 solver precision), but the whole sweep runs as one compiled XLA
-    computation and the host syncs only every ``check_every`` iterations."""
+    vs f64 solver precision), but every ``check_every``-iteration window
+    runs as one compiled ``lax.scan`` dispatch and the host syncs only at
+    window boundaries."""
     t_start = time.perf_counter()
-    rng = np.random.default_rng(seed)
     N = tensor.nmodes
-    if plan is None:
-        plan = make_plan(tensor, kappa)
     check_every = max(1, int(check_every))
-
-    factors = tuple(
-        jnp.asarray(rng.standard_normal((I, rank)).astype(np.float32))
-        for I in tensor.shape
-    )
-    grams = tuple(F.T @ F for F in factors)
-    weights = jnp.ones((rank,), jnp.float32)
-    state = (factors, grams, weights)
+    state = init_state(tensor.shape, rank, seed)
 
     if donate is None:
         # Buffer donation is a no-op (with a warning) on CPU.
@@ -234,7 +298,16 @@ def cpd_als_fused(
     if solver not in ("cho", "inv"):
         raise ValueError(f"unknown solver {solver!r}")
 
-    mode_data_all, pallas_meta = _collect_mode_data(plan, backend, rank)
+    if plan is None and backend == "coo":
+        # The coo backend needs no mode-specific layouts: skip the host-side
+        # preprocessing (per-mode sorts) entirely and upload the raw COO.
+        coo = (jnp.asarray(tensor.indices),
+               jnp.asarray(tensor.values.astype(np.float32)))
+        mode_data_all, pallas_meta = tuple(coo for _ in range(N)), None
+    else:
+        if plan is None:
+            plan = make_plan(tensor, kappa)
+        mode_data_all, pallas_meta = _collect_mode_data(plan, backend, rank)
     norm_x_sq = tensor.norm() ** 2
     fit_data = (
         jnp.asarray(tensor.indices),
@@ -242,31 +315,39 @@ def cpd_als_fused(
         jnp.asarray(norm_x_sq, jnp.float32),
     )
 
-    sweep = _build_sweep(
-        backend, N, rank, tuple(int(s) for s in tensor.shape),
-        pallas_meta, bool(interpret), bool(donate), solver,
-    )
+    shapes = tuple(int(s) for s in tensor.shape)
+    n_blocks, rem = divmod(n_iters, check_every)
+    sweep_k = _build_sweep_block(
+        backend, N, rank, shapes, pallas_meta, bool(interpret), bool(donate),
+        solver, check_every,
+    ) if n_blocks else None
+    sweep_rem = _build_sweep_block(
+        backend, N, rank, shapes, pallas_meta, bool(interpret), bool(donate),
+        solver, rem,
+    ) if rem else None
 
     fits_dev: list = []
     host_syncs = 0
     last_fit = -np.inf
     it = 0
-    for it in range(1, n_iters + 1):
-        state, fit = sweep(state, mode_data_all, fit_data)
-        fits_dev.append(fit)
-        if it % check_every == 0 or it == n_iters:
-            f = float(fit)                      # the only in-loop host sync
-            host_syncs += 1
-            if verbose:
-                print(f"  ALS iter {it:3d}: fit={f:.6f} (fused)")
-            if abs(f - last_fit) < tol:
-                break
-            last_fit = f
+    for b in range(n_blocks + (1 if rem else 0)):
+        k = check_every if b < n_blocks else rem
+        fn = sweep_k if b < n_blocks else sweep_rem
+        state, fits_blk = fn(state, mode_data_all, fit_data)
+        fits_dev.append(fits_blk)
+        it += k
+        f = float(fits_blk[-1])                 # the only in-loop host sync
+        host_syncs += 1
+        if verbose:
+            print(f"  ALS iter {it:3d}: fit={f:.6f} (fused)")
+        if abs(f - last_fit) < tol:
+            break
+        last_fit = f
 
     host_syncs += 1                             # final materialization
-    # One batched device_get for the whole run (not a fetch per iteration),
+    # One batched device_get for the whole run (not a fetch per window),
     # so host_syncs honestly reflects the transfer count.
-    fits = [float(f) for f in jax.device_get(fits_dev)]
+    fits = [float(f) for blk in jax.device_get(fits_dev) for f in blk]
     return CPDResult(
         factors=[np.asarray(F) for F in state[0]],
         weights=np.asarray(state[2], dtype=np.float64),

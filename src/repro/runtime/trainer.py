@@ -62,52 +62,127 @@ class StragglerMonitor:
 
 
 class ALSRunner:
-    """Decomposition-as-a-service: serve CPD requests through the
-    device-resident fused ALS engine.
+    """Decomposition-as-a-service front door.
 
-    The serving pattern the fused engine is built for: many tensors of the
-    same shape family arrive over time; the first request per (shape, rank,
-    backend) compiles the sweep, every later one reuses the executable
-    (see ``core.als_device`` — zero retrace).  Each request's wall time
-    feeds the same ``StragglerMonitor`` the trainer uses, so a slow
-    decomposition (retrace, contended host, pathological tensor) is flagged
-    exactly like a slow training step.
+    ``mode="batched"`` (default) delegates to the serving subsystem
+    (``repro.serve``): requests are quantized into (shape, nnz-bucket)
+    classes, micro-batched per bucket, and executed as ONE vmapped fused
+    sweep per batch — ``decompose_async``/``flush`` expose the
+    throughput path, while the synchronous ``decompose`` force-flushes
+    its own bucket (batch of whatever is queued there).
+    ``mode="sequential"`` keeps the one-request-at-a-time fused engine.
+
+    Either way the executable story is the same: the first request per
+    class compiles, every later one reuses the cached executable — and
+    ``history`` records the per-request executable-cache hit/miss delta,
+    so a straggler caused by a retrace (cold bucket) is distinguishable
+    from one caused by contention (warm bucket, slow host).  Each
+    request's wall time feeds the same ``StragglerMonitor`` the trainer
+    uses.
     """
 
     def __init__(self, rank: int, *, kappa: int = 1, backend: str = "segment",
                  engine: str = "fused", check_every: int = 4,
-                 monitor: StragglerMonitor | None = None):
+                 monitor: StragglerMonitor | None = None,
+                 mode: str | None = None, max_batch: int = 8,
+                 max_wait_s: float = 0.005, policy=None):
+        if mode is None:
+            # Default to the batched service where it supports the
+            # configuration; engine="host" and backend="pallas" (whose
+            # packed slabs don't stack) keep working via the sequential
+            # path instead of failing construction.
+            mode = ("batched" if engine == "fused"
+                    and backend in ("segment", "coo") else "sequential")
+        if mode not in ("batched", "sequential"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "batched" and engine != "fused":
+            raise ValueError("mode='batched' requires engine='fused'; "
+                             "use mode='sequential' for engine='host'")
         self.rank = rank
         self.kappa = kappa
         self.backend = backend
         self.engine = engine
         self.check_every = check_every
+        self.mode = mode
         self.monitor = monitor or StragglerMonitor()
         self.history: list[dict] = []
+        self.service = None
+        if mode == "batched":
+            from ..serve import DecompositionService
+
+            self.service = DecompositionService(
+                rank, kappa=kappa, backend=backend, check_every=check_every,
+                policy=policy, max_batch=max_batch, max_wait_s=max_wait_s)
+
+    def _cache_stats(self) -> dict:
+        if self.mode == "batched":
+            from ..serve import batched_cache_stats
+
+            return batched_cache_stats()
+        from ..core.als_device import sweep_cache_stats
+
+        return sweep_cache_stats()
+
+    def _record(self, tensor: SparseTensor, res: CPDResult, dt: float,
+                cache_before: dict, log: Callable[[str], None]) -> None:
+        after = self._cache_stats()
+        req = len(self.history) + 1
+        flagged = self.monitor.observe(req, dt)
+        rec = {"request": req, "shape": tuple(tensor.shape),
+               "nnz": tensor.nnz, "fit": res.fits[-1] if res.fits else 0.0,
+               "iters": res.iters, "host_syncs": res.host_syncs,
+               "time_s": dt, "straggler": flagged,
+               "sweep_cache_hits": after["hits"] - cache_before["hits"],
+               "sweep_cache_misses": after["misses"] - cache_before["misses"]}
+        self.history.append(rec)
+        if flagged:
+            cause = ("retrace" if rec["sweep_cache_misses"] else "contention")
+            log(f"[als] request {req} STRAGGLER ({cause}): {dt*1e3:.0f} ms "
+                f"(mean {self.monitor.mean*1e3:.0f} ms)")
 
     def decompose(self, tensor: SparseTensor, *, n_iters: int = 25,
                   tol: float = 1e-5, seed: int = 0, verbose: bool = False,
                   log: Callable[[str], None] = print) -> CPDResult:
         from ..core.cpd import cpd_als
 
+        before = self._cache_stats()
         t0 = time.perf_counter()
-        res = cpd_als(
-            tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
-            seed=seed, backend=self.backend, engine=self.engine,
-            check_every=self.check_every, verbose=verbose,
-        )
+        if self.mode == "batched":
+            fut = self.service.submit(tensor, n_iters=n_iters, tol=tol,
+                                      seed=seed)
+            res = fut.result()    # force-flushes this request's bucket
+            if verbose:           # post-hoc trajectory at window boundaries
+                for i in range(self.check_every - 1, len(res.fits),
+                               self.check_every):
+                    log(f"  ALS iter {i + 1:3d}: fit={res.fits[i]:.6f} "
+                        f"(batched)")
+        else:
+            res = cpd_als(
+                tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
+                seed=seed, backend=self.backend, engine=self.engine,
+                check_every=self.check_every, verbose=verbose,
+            )
         dt = time.perf_counter() - t0
-        req = len(self.history) + 1
-        flagged = self.monitor.observe(req, dt)
-        rec = {"request": req, "shape": tuple(tensor.shape),
-               "nnz": tensor.nnz, "fit": res.fits[-1] if res.fits else 0.0,
-               "iters": res.iters, "host_syncs": res.host_syncs,
-               "time_s": dt, "straggler": flagged}
-        self.history.append(rec)
-        if flagged:
-            log(f"[als] request {req} STRAGGLER: {dt*1e3:.0f} ms "
-                f"(mean {self.monitor.mean*1e3:.0f} ms)")
+        self._record(tensor, res, dt, before, log)
         return res
+
+    def decompose_async(self, tensor: SparseTensor, *, n_iters: int = 25,
+                        tol: float = 1e-5, seed: int = 0):
+        """Submit without blocking (batched mode only): returns a
+        ``DecompositionFuture``.  The request completes when its bucket
+        flushes (max-batch, max-wait via ``poll()``, ``flush()``, or the
+        future's own ``result()``).  Async completions are recorded in
+        ``service.metrics``, not ``history``."""
+        if self.service is None:
+            raise RuntimeError("decompose_async requires mode='batched'")
+        return self.service.submit(tensor, n_iters=n_iters, tol=tol,
+                                   seed=seed)
+
+    def poll(self) -> int:
+        return self.service.poll() if self.service else 0
+
+    def flush(self) -> int:
+        return self.service.drain() if self.service else 0
 
 
 class Trainer:

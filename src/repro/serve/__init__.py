@@ -1,0 +1,30 @@
+"""Serving subsystem: shape-bucketed, micro-batched decomposition service.
+
+One small tensor cannot saturate the device (the paper's
+overhead-dominated regime), so the throughput path is executing *many*
+decompositions per dispatch:
+
+  buckets        — quantize requests into (shape, nnz-bucket) classes;
+                   zero-pad nnz to the bucket cap (bit-exact no-op).
+  batched_engine — stack B bucket-mates, jax.vmap the fused ALS sweep,
+                   per-tensor convergence masking, executable cache.
+  scheduler      — per-bucket queues, submit/future semantics,
+                   max-batch / max-wait flush triggers.
+  metrics        — throughput, p50/p99 latency, padding overhead, batch
+                   occupancy, cache hit rates.
+
+``runtime.ALSRunner`` fronts this service (``mode="batched"``);
+``benchmarks/serve_bench.py`` measures it against the sequential path.
+"""
+from .batched_engine import BatchedEngine, batched_cache_stats
+from .buckets import Bucket, BucketPolicy, pad_tensor
+from .metrics import BatchEvent, ServiceMetrics
+from .scheduler import (BatchScheduler, DecompositionFuture,
+                        DecompositionService)
+
+__all__ = [
+    "Bucket", "BucketPolicy", "pad_tensor",
+    "BatchedEngine", "batched_cache_stats",
+    "BatchScheduler", "DecompositionFuture", "DecompositionService",
+    "BatchEvent", "ServiceMetrics",
+]

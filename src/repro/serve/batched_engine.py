@@ -1,0 +1,268 @@
+"""Vmapped batched ALS engine: B same-bucket decompositions, one dispatch.
+
+The small-tensor regime is overhead-dominated — a single sweep cannot
+saturate the device — so the serving path stacks B bucket-mates (same
+shape, nnz padded to the bucket cap, see ``serve.buckets``) and runs
+``jax.vmap`` of the *same* closure-free sweep the sequential engine jits
+(``core.als_device.build_sweep_fn``).  One dispatch then advances B
+decompositions by a whole ``check_every`` window (``lax.scan``, exactly
+mirroring the sequential engine's window structure):
+
+  * per-tensor convergence masking: every tensor keeps sweeping until the
+    whole batch is done, but a converged (or iteration-capped) tensor's
+    state is frozen under ``jnp.where`` — its factors, fit, and iteration
+    counter stop changing, so batching never alters an individual
+    result.  Convergence is judged on device at window boundaries
+    against the previous boundary's fit — the sequential engine's exact
+    stopping rule, vectorized — so a request converges at the same
+    iteration whichever front door served it (for a uniform-``n_iters``
+    batch; mixed budgets can shift a straggler's window grid).
+  * the batch state pytree is donated (off-CPU), so XLA reuses the B-way
+    buffers in place across windows.
+  * executables are cached per (bucket shape, nnz cap, B, rank, backend,
+    solver, window): a warm bucket class pays zero retrace per batch.
+    ``batched_cache_stats()`` exposes the counters.
+
+Backends: ``segment`` (default; per-tensor mode layouts are stacked —
+same padded nnz ⇒ identical array shapes regardless of which
+load-balancing scheme each tensor picked) and ``coo`` (no host-side
+layout preprocessing at all).  ``pallas`` is not batchable yet: its
+packed slab shapes are data-dependent, so bucket-mates do not stack —
+see the ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..core import als_device
+from ..core.coo import SparseTensor
+from ..core.cpd import CPDResult
+from ..core.layout import build_all_mode_layouts
+from .buckets import pad_tensor
+
+_BATCH_BACKENDS = ("segment", "coo")
+
+
+@functools.lru_cache(maxsize=None)
+def _build_batched_block(backend: str, nmodes: int, rank: int,
+                         shapes: tuple[int, ...], nnz_cap: int, batch: int,
+                         interpret: bool, donate: bool, solver: str,
+                         block: int):
+    """Jitted ``lax.scan`` of ``block`` vmapped sweeps with per-tensor
+    convergence masking.  ``nnz_cap`` and ``batch`` are part of the key so
+    the cache honestly counts one executable per (bucket, B) class.
+
+    carry = (state, active (B,) bool, last_fit (B,), done (B,) int32);
+    returns (carry, fits (block, B))."""
+    sweep = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
+                                      None, interpret, solver)
+    vsweep = jax.vmap(sweep, in_axes=(0, 0, 0))
+
+    def run_block(carry, mode_data_all, fit_data, tol_b, max_iters_b):
+        fit_ref = carry[2]       # fit at the previous window boundary
+
+        def body(c, _):
+            state, active, last_fit, done = c
+            new_state, fit = vsweep(state, mode_data_all, fit_data)
+
+            def freeze(new, old):
+                mask = active.reshape(
+                    (active.shape[0],) + (1,) * (new.ndim - 1))
+                return jnp.where(mask, new, old)
+
+            state = jax.tree_util.tree_map(freeze, new_state, state)
+            fit = jnp.where(active, fit, last_fit)
+            done = done + active.astype(jnp.int32)
+            active = active & (done < max_iters_b)
+            return (state, active, fit, done), fit
+
+        (state, active, fit, done), fits = lax.scan(body, carry, xs=None,
+                                                    length=block)
+        # Convergence is judged at the WINDOW boundary against the previous
+        # boundary's fit — the same rule (and therefore the same stopping
+        # iteration) as the sequential fused engine, just vectorized.
+        active = active & ~(jnp.abs(fit - fit_ref) < tol_b)
+        return (state, active, fit, done), fits
+
+    return jax.jit(run_block, donate_argnums=(0,) if donate else ())
+
+
+def batched_cache_stats():
+    """(hits, misses, currsize) of the batched executable cache, keyed per
+    (bucket, B, rank, backend, window)."""
+    info = _build_batched_block.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "currsize": info.currsize}
+
+
+class BatchedEngine:
+    """Stacks same-bucket tensors and drives the vmapped fused sweep."""
+
+    def __init__(self, rank: int, *, kappa: int = 1,
+                 backend: str = "segment", check_every: int = 4,
+                 interpret: bool = True, donate: bool | None = None,
+                 solver: str = "auto"):
+        if backend not in _BATCH_BACKENDS:
+            raise ValueError(
+                f"batched engine supports {_BATCH_BACKENDS}, got "
+                f"{backend!r} (pallas slab shapes are data-dependent and "
+                f"do not stack)")
+        self.rank = rank
+        self.kappa = kappa
+        self.backend = backend
+        self.check_every = max(1, int(check_every))
+        self.interpret = bool(interpret)
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
+        self.donate = bool(donate)
+        if solver == "auto":
+            solver = "cho" if jax.default_backend() != "cpu" else "inv"
+        if solver not in ("cho", "inv"):
+            raise ValueError(f"unknown solver {solver!r}")
+        self.solver = solver
+
+    # -- data staging -------------------------------------------------------
+
+    def _stack_batch(self, padded: list[SparseTensor]):
+        """Stacked per-mode device arrays + fit data for the vmapped sweep."""
+        N = padded[0].nmodes
+        idx = jnp.asarray(np.stack([t.indices for t in padded]))
+        vals = jnp.asarray(np.stack(
+            [t.values.astype(np.float32) for t in padded]))
+        norms = jnp.asarray(
+            np.array([t.norm() ** 2 for t in padded], dtype=np.float32))
+        fit_data = (idx, vals, norms)
+        if self.backend == "coo":
+            coo = (idx, vals)
+            return tuple(coo for _ in range(N)), fit_data
+        # segment: build each tensor's mode-specific layouts on host, then
+        # stack.  Padding to a common nnz is exactly what makes the layout
+        # arrays stack — every bucket-mate yields (nnz_cap, ·) per mode.
+        per_mode: list[list[tuple]] = [[] for _ in range(N)]
+        for t in padded:
+            for d, lay in enumerate(build_all_mode_layouts(t, self.kappa)):
+                im = lay.input_modes()
+                per_mode[d].append((lay.indices[:, im], lay.rows,
+                                    lay.values.astype(np.float32),
+                                    lay.row_perm))
+        mode_data_all = tuple(
+            tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode[d]]))
+                  for j in range(4))
+            for d in range(N)
+        )
+        return mode_data_all, fit_data
+
+    # -- driver -------------------------------------------------------------
+
+    def decompose_batch(
+        self,
+        tensors: Sequence[SparseTensor],
+        *,
+        n_iters: int | Sequence[int] = 25,
+        tol: float | Sequence[float] = 1e-5,
+        seeds: Sequence[int] | None = None,
+        nnz_cap: int | None = None,
+    ) -> list[CPDResult]:
+        """Decompose B same-shape tensors in vmapped lockstep.
+
+        ``n_iters`` / ``tol`` / ``seeds`` may be scalars or per-tensor
+        sequences (requests batched together keep their own budgets).
+        Returned ``CPDResult``s carry per-tensor factors/fits/iters;
+        ``total_seconds`` and ``host_syncs`` are *batch-level* (shared by
+        all B results — the whole point is that the batch paid them once).
+        """
+        tensors = list(tensors)
+        if not tensors:
+            return []
+        t_start = time.perf_counter()
+        B = len(tensors)
+        shape = tuple(int(s) for s in tensors[0].shape)
+        for t in tensors:
+            if tuple(t.shape) != shape:
+                raise ValueError(
+                    f"batch mixes shapes {shape} and {tuple(t.shape)}; "
+                    f"bucket before batching")
+        N = len(shape)
+        cap = int(nnz_cap) if nnz_cap is not None else max(t.nnz
+                                                           for t in tensors)
+        padded = [pad_tensor(t, cap) for t in tensors]
+
+        n_iters_b = np.broadcast_to(
+            np.asarray(n_iters, dtype=np.int32), (B,)).copy()
+        tol_b = np.broadcast_to(
+            np.asarray(tol, dtype=np.float32), (B,)).copy()
+        if seeds is None:
+            seeds = [0] * B
+        if len(seeds) != B:
+            raise ValueError("seeds must match batch size")
+
+        mode_data_all, fit_data = self._stack_batch(padded)
+        # Host-side init, stacked once: one upload per state leaf instead
+        # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
+        inits = [als_device.init_state_host(shape, self.rank, int(s))
+                 for s in seeds]
+        state = (
+            tuple(jnp.asarray(np.stack([st[0][d] for st in inits]))
+                  for d in range(N)),
+            tuple(jnp.asarray(np.stack([st[1][d] for st in inits]))
+                  for d in range(N)),
+            jnp.asarray(np.stack([st[2] for st in inits])),
+        )
+        carry = (
+            state,
+            jnp.ones((B,), dtype=bool),
+            jnp.full((B,), -jnp.inf, dtype=jnp.float32),
+            jnp.zeros((B,), dtype=jnp.int32),
+        )
+        tol_dev = jnp.asarray(tol_b)
+        max_iters_dev = jnp.asarray(n_iters_b)
+
+        max_iters = int(n_iters_b.max())
+        fits_dev: list = []
+        host_syncs = 0
+        it = 0
+        while it < max_iters:
+            k = min(self.check_every, max_iters - it)
+            fn = _build_batched_block(
+                self.backend, N, self.rank, shape, cap, B,
+                self.interpret, self.donate, self.solver, k,
+            )
+            carry, fits_blk = fn(carry, mode_data_all, fit_data,
+                                 tol_dev, max_iters_dev)
+            fits_dev.append(fits_blk)
+            it += k
+            host_syncs += 1          # the only in-loop sync: the active mask
+            if not bool(np.any(jax.device_get(carry[1]))):
+                break
+
+        host_syncs += 1              # final materialization
+        state, _, _, done = carry
+        fits_cat = (jnp.concatenate(fits_dev, axis=0) if fits_dev
+                    else jnp.zeros((0, B), jnp.float32))   # n_iters <= 0
+        # One batched device_get for everything.
+        factors_h, weights_h, done_h, fits_h = jax.device_get(
+            (state[0], state[2], done, fits_cat))
+        wall = time.perf_counter() - t_start
+
+        results = []
+        for i in range(B):
+            ni = int(done_h[i])
+            results.append(CPDResult(
+                factors=[np.asarray(factors_h[d][i]) for d in range(N)],
+                weights=np.asarray(weights_h[i], dtype=np.float64),
+                fits=[float(f) for f in fits_h[:ni, i]],
+                iters=ni,
+                mttkrp_seconds=0.0,
+                total_seconds=wall,
+                host_syncs=host_syncs,
+                engine="batched",
+            ))
+        return results

@@ -1,0 +1,123 @@
+"""Shape-bucketing policy for the decomposition service.
+
+A vmapped batch can only stack tensors whose arrays have identical
+shapes, and a cached executable only pays off when many requests map to
+it.  The bucketing policy therefore quantizes every incoming
+``SparseTensor`` into a ``(shape, nnz-bucket)`` class:
+
+  * the dense shape is an exact key — factor matrices are (I_d, R), so
+    tensors of different shapes can never share a sweep executable;
+  * nnz is rounded UP to a bucket boundary and the tensor is padded with
+    zero-valued entries at coordinate (0, …, 0) until it fills the
+    bucket.  Everything in one bucket then shares a single compiled
+    (and vmappable) sweep.
+
+This is the request-stream analogue of the kernel-level padding the
+load-balancing literature pays for uniform parallel work (Nisa et al.,
+arXiv 1904.03329): a bounded padding overhead buys shape-uniform
+batches.
+
+Padding invariance
+------------------
+Appending a zero-valued nonzero at row 0 is an exact no-op for every
+engine in this repo, not merely an approximate one:
+
+  * MTTKRP: the padded entry contributes ``0.0 * prod(factor rows)`` =
+    +0.0 to output row 0.  ``x + 0.0`` is bit-identical to ``x`` for
+    every finite float except ``-0.0`` (values generated here are never
+    exactly zero), and all layout sorts are stable, so real entries keep
+    their relative accumulation order.
+  * the sparse fit: padded values are 0, so the inner product and
+    ``||X||`` are untouched.
+
+``tests/serve/test_buckets.py`` asserts the resulting factors are
+bit-identical, padded vs unpadded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core.coo import SparseTensor
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One (shape, nnz-cap) equivalence class of the request stream."""
+
+    shape: tuple[int, ...]
+    nnz_cap: int
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    def padding_fraction(self, nnz: int) -> float:
+        """Fraction of the bucket's nnz slots wasted on zero padding."""
+        return (self.nnz_cap - nnz) / self.nnz_cap if self.nnz_cap else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPolicy:
+    """nnz quantization rule.
+
+    mode:
+      'quantum'   — round nnz up to the next multiple of ``quantum``
+                    (default).  Worst-case padding fraction is
+                    quantum / cap, i.e. < 15% once nnz > ~6.7·quantum;
+                    the executable count grows linearly in the nnz
+                    spread, which is fine in the small-tensor regime
+                    where same-shape streams concentrate tightly.
+      'geometric' — round nnz up to the next ``min_cap · growth^k``.
+                    Bounded executable count for arbitrary nnz spreads
+                    at the price of up to (1 - 1/growth) padding.
+    """
+
+    mode: str = "quantum"
+    quantum: int = 128
+    growth: float = 1.25
+    min_cap: int = 128
+
+    def __post_init__(self):
+        if self.mode == "geometric" and self.growth <= 1.0:
+            raise ValueError(f"geometric growth must be > 1, "
+                             f"got {self.growth}")
+        if self.quantum < 1 or self.min_cap < 1:
+            raise ValueError("quantum and min_cap must be >= 1")
+
+    def nnz_cap(self, nnz: int) -> int:
+        nnz = max(int(nnz), 1)
+        if self.mode == "quantum":
+            q = max(int(self.quantum), 1)
+            return max(-(-nnz // q) * q, self.min_cap)
+        if self.mode == "geometric":
+            cap = float(self.min_cap)
+            while cap < nnz:
+                cap *= self.growth
+            return int(np.ceil(cap))
+        raise ValueError(f"unknown bucketing mode {self.mode!r}")
+
+    def bucket_for(self, tensor: SparseTensor) -> Bucket:
+        return Bucket(tuple(int(s) for s in tensor.shape),
+                      self.nnz_cap(tensor.nnz))
+
+
+def pad_tensor(tensor: SparseTensor, nnz_cap: int) -> SparseTensor:
+    """Append zero-valued entries at coordinate (0, …, 0) until
+    ``nnz == nnz_cap``.  Appending (not interleaving) keeps every real
+    entry's position in the canonical order, which is what makes the
+    padded decomposition bit-identical (stable layout sorts preserve
+    relative order; +0.0 accumulation is exact)."""
+    if tensor.nnz > nnz_cap:
+        raise ValueError(
+            f"tensor nnz {tensor.nnz} exceeds bucket cap {nnz_cap}")
+    if tensor.nnz == nnz_cap:
+        return tensor
+    pad = nnz_cap - tensor.nnz
+    idx = np.concatenate(
+        [tensor.indices,
+         np.zeros((pad, tensor.nmodes), dtype=tensor.indices.dtype)], axis=0)
+    vals = np.concatenate(
+        [tensor.values, np.zeros(pad, dtype=tensor.values.dtype)])
+    return SparseTensor(idx, vals, tensor.shape)

@@ -1,0 +1,108 @@
+"""Service telemetry: throughput, latency percentiles, padding overhead,
+batch occupancy, executable-cache hit rates.
+
+The serving thesis (one small tensor cannot saturate the device) is only
+validated by *stream-level* numbers, so the scheduler records one event
+per flushed batch and one latency per completed request; ``snapshot()``
+reduces them to the dashboard dict ``benchmarks/serve_bench.py`` prints.
+
+Memory is bounded for long-running services: counts, padding, occupancy,
+cache and trigger totals are running aggregates (exact over the full
+uptime), while latency percentiles are computed over a sliding window of
+the most recent ``window`` requests (and ``batches`` retains only the
+most recent events, for debugging).
+
+All recording goes through the scheduler's lock, so the counters need no
+locking of their own.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BatchEvent:
+    bucket_key: tuple
+    batch_size: int
+    max_batch: int
+    real_nnz: int          # sum of un-padded nnz over the batch
+    padded_nnz: int        # batch_size * bucket nnz_cap
+    wall_s: float
+    trigger: str           # 'max_batch' | 'max_wait' | 'forced'
+    cache_hits: int        # executable-cache hit delta for this flush
+    cache_misses: int
+
+
+class ServiceMetrics:
+    """Accumulates per-request and per-batch events; ``snapshot()`` is the
+    read side."""
+
+    def __init__(self, window: int = 4096):
+        self.submitted = 0
+        self.completed = 0
+        self.batch_count = 0
+        self.latencies_s: collections.deque = collections.deque(
+            maxlen=window)
+        self.batches: collections.deque = collections.deque(maxlen=window)
+        self.t_first_submit: float | None = None
+        self.t_last_complete: float | None = None
+        self._real_nnz = 0
+        self._padded_nnz = 0
+        self._cache_hits = 0
+        self._cache_misses = 0
+        self._occupancy_sum = 0.0
+        self._triggers = collections.Counter()
+
+    # -- write side (called by the scheduler under its lock) ----------------
+
+    def record_submit(self, now: float):
+        self.submitted += 1
+        if self.t_first_submit is None:
+            self.t_first_submit = now
+
+    def record_batch(self, event: BatchEvent, latencies_s: list[float],
+                     now: float):
+        self.batches.append(event)
+        self.batch_count += 1
+        self.completed += event.batch_size
+        self.latencies_s.extend(latencies_s)
+        self.t_last_complete = now
+        self._real_nnz += event.real_nnz
+        self._padded_nnz += event.padded_nnz
+        self._cache_hits += event.cache_hits
+        self._cache_misses += event.cache_misses
+        if event.max_batch:
+            self._occupancy_sum += event.batch_size / event.max_batch
+        self._triggers[event.trigger] += 1
+
+    # -- read side ----------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        lat = np.asarray(self.latencies_s, dtype=np.float64)
+        real, padded = self._real_nnz, self._padded_nnz
+        hits, misses = self._cache_hits, self._cache_misses
+        span = 0.0
+        if self.t_first_submit is not None and self.t_last_complete is not None:
+            span = max(self.t_last_complete - self.t_first_submit, 0.0)
+        return {
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "batches": self.batch_count,
+            "throughput_rps": self.completed / span if span > 0 else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
+            # fraction of device nnz-slots spent on zero padding
+            "padding_overhead": (padded - real) / padded if padded else 0.0,
+            "batch_occupancy": (self._occupancy_sum / self.batch_count
+                                if self.batch_count else 0.0),
+            "cache_hits": hits,
+            "cache_misses": misses,
+            "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "flush_triggers": {
+                t: self._triggers.get(t, 0)
+                for t in ("max_batch", "max_wait", "forced")
+            },
+        }

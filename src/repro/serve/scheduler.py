@@ -1,0 +1,258 @@
+"""Micro-batching request scheduler: per-bucket queues, submit/future
+semantics, max-batch / max-wait flush triggers.
+
+The service sits between callers (one ``SparseTensor`` per request) and
+the vmapped ``BatchedEngine`` (B bucket-mates per dispatch):
+
+  * ``submit()`` quantizes the request into its (shape, nnz-cap) bucket
+    (``serve.buckets``), enqueues it, and returns a
+    ``DecompositionFuture`` immediately.
+  * a bucket flushes when it accumulates ``max_batch`` requests
+    (throughput trigger), when its oldest request has waited
+    ``max_wait_s`` (latency trigger, checked by ``poll()`` and every
+    ``submit``), or when ``flush()`` / ``Future.result()`` forces it.
+  * flushing pads every queued tensor to the bucket cap, runs one
+    batched decomposition, resolves the futures, and records the batch
+    in ``ServiceMetrics``.
+
+The scheduler is deliberately event-driven rather than thread-driven:
+flushes happen inside ``submit``/``poll``/``result`` calls, which makes
+the trigger logic deterministic and unit-testable (inject ``clock``).
+Queue state is guarded by an RLock, but batches are *popped* under the
+lock and *executed* after releasing it, so a multi-second compile in one
+bucket never blocks concurrent submitters (a popped batch can no longer
+be double-flushed; each request belongs to exactly one batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable
+
+from ..core.coo import SparseTensor
+from ..core.cpd import CPDResult
+from .batched_engine import BatchedEngine, batched_cache_stats
+from .buckets import Bucket, BucketPolicy
+from .metrics import BatchEvent, ServiceMetrics
+
+
+class DecompositionFuture:
+    """Handle for a submitted request.  ``result()`` force-flushes the
+    owning bucket if the request is still queued, so a caller that wants
+    its answer *now* never deadlocks waiting for bucket-mates."""
+
+    def __init__(self, scheduler: "BatchScheduler", bucket: Bucket):
+        self._scheduler = scheduler
+        self._bucket = bucket
+        self._done = threading.Event()
+        self._result: CPDResult | None = None
+        self._exception: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def _resolve(self, result: CPDResult | None,
+                 exc: BaseException | None = None):
+        self._result = result
+        self._exception = exc
+        self._done.set()
+
+    def result(self, timeout: float | None = None) -> CPDResult:
+        """Without ``timeout``: force-flush the owning bucket if the
+        request is still queued, run to completion, return.  With
+        ``timeout``: wait that long for completion by another caller's
+        flush (the bounded wait cannot itself start a flush, whose
+        compile/execute time it could not honor) and raise
+        ``TimeoutError`` on expiry."""
+        if timeout is not None:
+            if not self._done.wait(timeout):
+                raise TimeoutError("decomposition not completed")
+        elif not self._done.is_set():
+            self._scheduler.flush(self._bucket)
+            self._done.wait()      # another thread may own the batch
+        if self._exception is not None:
+            raise self._exception
+        assert self._result is not None
+        return self._result
+
+
+@dataclasses.dataclass
+class _Pending:
+    tensor: SparseTensor
+    future: DecompositionFuture
+    n_iters: int
+    tol: float
+    seed: int
+    t_submit: float
+
+
+class BatchScheduler:
+    """Shape-bucketed micro-batching front of the decomposition service."""
+
+    def __init__(self, engine: BatchedEngine, *,
+                 policy: BucketPolicy | None = None,
+                 max_batch: int = 8,
+                 max_wait_s: float = 0.005,
+                 metrics: ServiceMetrics | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.engine = engine
+        self.policy = policy or BucketPolicy()
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.metrics = metrics or ServiceMetrics()
+        self.clock = clock
+        self._queues: dict[Bucket, list[_Pending]] = {}
+        self._lock = threading.RLock()
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, tensor: SparseTensor, *, n_iters: int = 25,
+               tol: float = 1e-5, seed: int = 0) -> DecompositionFuture:
+        bucket = self.policy.bucket_for(tensor)
+        now = self.clock()
+        with self._lock:
+            fut = DecompositionFuture(self, bucket)
+            self._queues.setdefault(bucket, []).append(
+                _Pending(tensor, fut, int(n_iters), float(tol), int(seed),
+                         now))
+            self.metrics.record_submit(now)
+            if len(self._queues[bucket]) >= self.max_batch:
+                work = [self._pop(bucket, "max_batch")]
+            else:
+                work = self._pop_expired()
+        self._run_batches(work)
+        return fut
+
+    def poll(self) -> int:
+        """Flush every bucket whose oldest request has waited past
+        ``max_wait_s``.  Returns the number of batches flushed.  Call this
+        from the serving loop between request arrivals."""
+        with self._lock:
+            work = self._pop_expired()
+        self._run_batches(work)
+        return len(work)
+
+    def flush(self, bucket: Bucket | None = None) -> int:
+        """Force-flush one bucket (or all).  Returns batches flushed."""
+        with self._lock:
+            buckets = ([bucket] if bucket is not None
+                       else list(self._queues.keys()))
+            work = []
+            for b in buckets:
+                while self._queues.get(b):
+                    work.append(self._pop(b, "forced"))
+        self._run_batches(work)
+        return len(work)
+
+    def pending(self, bucket: Bucket | None = None) -> int:
+        with self._lock:
+            if bucket is not None:
+                return len(self._queues.get(bucket, []))
+            return sum(len(q) for q in self._queues.values())
+
+    # -- flush machinery ----------------------------------------------------
+    # Pop under the lock, execute outside it: a popped batch belongs to
+    # exactly one caller, so the engine (potentially a multi-second
+    # compile) never runs inside the critical section.
+
+    def _pop(self, bucket: Bucket, trigger: str):
+        q = self._queues.get(bucket, [])
+        batch, self._queues[bucket] = q[: self.max_batch], q[self.max_batch:]
+        return bucket, batch, trigger
+
+    def _pop_expired(self) -> list:
+        now = self.clock()
+        work = []
+        for b in list(self._queues.keys()):
+            q = self._queues.get(b)
+            if q and now - q[0].t_submit >= self.max_wait_s:
+                work.append(self._pop(b, "max_wait"))
+        return work
+
+    def _run_batches(self, work: list) -> None:
+        for bucket, batch, trigger in work:
+            if batch:
+                self._run_one(bucket, batch, trigger)
+
+    def _run_one(self, bucket: Bucket, batch: list, trigger: str) -> None:
+        # Cache counters are global; under concurrent flushes another
+        # thread's compile can land inside this window, so per-batch
+        # attribution is best-effort (totals stay exact).
+        stats0 = batched_cache_stats()
+        t0 = time.perf_counter()
+        try:
+            results = self.engine.decompose_batch(
+                [p.tensor for p in batch],
+                n_iters=[p.n_iters for p in batch],
+                tol=[p.tol for p in batch],
+                seeds=[p.seed for p in batch],
+                nnz_cap=bucket.nnz_cap,
+            )
+        except BaseException as exc:
+            # Executor semantics: the failure belongs to the batch's own
+            # futures (raised from their result()), never to whichever
+            # caller's submit/poll happened to trigger the flush — a
+            # submitter must still receive its future for an unrelated
+            # bucket's engine error.
+            for p in batch:
+                p.future._resolve(None, exc)
+            return
+        wall = time.perf_counter() - t0
+        now = self.clock()
+        stats1 = batched_cache_stats()
+        for p, res in zip(batch, results):
+            p.future._resolve(res)
+        with self._lock:
+            self.metrics.record_batch(
+                BatchEvent(
+                    bucket_key=(bucket.shape, bucket.nnz_cap),
+                    batch_size=len(batch),
+                    max_batch=self.max_batch,
+                    real_nnz=sum(p.tensor.nnz for p in batch),
+                    padded_nnz=bucket.nnz_cap * len(batch),
+                    wall_s=wall,
+                    trigger=trigger,
+                    cache_hits=stats1["hits"] - stats0["hits"],
+                    cache_misses=stats1["misses"] - stats0["misses"],
+                ),
+                latencies_s=[now - p.t_submit for p in batch],
+                now=now,
+            )
+
+
+class DecompositionService:
+    """Convenience facade: engine + scheduler + metrics in one object.
+
+    >>> svc = DecompositionService(rank=16, max_batch=8)
+    >>> futs = [svc.submit(t) for t in tensors]
+    >>> svc.drain()
+    >>> results = [f.result() for f in futs]
+    """
+
+    def __init__(self, rank: int, *, kappa: int = 1,
+                 backend: str = "segment", check_every: int = 4,
+                 policy: BucketPolicy | None = None, max_batch: int = 8,
+                 max_wait_s: float = 0.005,
+                 clock: Callable[[], float] = time.monotonic):
+        self.engine = BatchedEngine(rank, kappa=kappa, backend=backend,
+                                    check_every=check_every)
+        self.metrics = ServiceMetrics()
+        self.scheduler = BatchScheduler(
+            self.engine, policy=policy, max_batch=max_batch,
+            max_wait_s=max_wait_s, metrics=self.metrics, clock=clock)
+
+    def submit(self, tensor: SparseTensor, **kw) -> DecompositionFuture:
+        return self.scheduler.submit(tensor, **kw)
+
+    def poll(self) -> int:
+        return self.scheduler.poll()
+
+    def drain(self) -> int:
+        """Flush everything still queued."""
+        return self.scheduler.flush()
+
+    def snapshot(self) -> dict:
+        return self.metrics.snapshot()

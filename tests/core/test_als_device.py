@@ -75,18 +75,38 @@ def test_fused_convergence_break_matches_host():
     np.testing.assert_allclose(fused.fits[-1], host.fits[-1], atol=1e-3)
 
 
-def test_als_runner_serves_repeated_requests():
-    """Runtime integration: ALSRunner routes through the fused engine and
-    records per-request latency/sync stats."""
+@pytest.mark.parametrize("mode,engine_name", [("sequential", "fused"),
+                                              ("batched", "batched")])
+def test_als_runner_serves_repeated_requests(mode, engine_name):
+    """Runtime integration: ALSRunner routes through the fused engine
+    (sequential) or the vmapped service (batched) and records per-request
+    latency/sync/cache stats."""
     from repro.runtime import ALSRunner
 
-    runner = ALSRunner(rank=3, kappa=2, check_every=2)
+    runner = ALSRunner(rank=3, kappa=2, check_every=2, mode=mode)
     for seed in (0, 1, 2):
         t = random_sparse((20, 12, 8), 400, seed=seed)
         res = runner.decompose(t, n_iters=4, tol=-1.0)
-        assert res.engine == "fused"
+        assert res.engine == engine_name
     assert len(runner.history) == 3
     assert all(r["host_syncs"] <= 4 // 2 + 1 for r in runner.history)
+    # satellite: per-request executable-cache deltas distinguish retrace
+    # stragglers from contention stragglers — first request compiles, the
+    # same-shape repeats must hit the cache.
+    assert runner.history[0]["sweep_cache_misses"] >= 1
+    assert all(r["sweep_cache_misses"] == 0 for r in runner.history[1:])
+    assert all(r["sweep_cache_hits"] >= 1 for r in runner.history[1:])
+
+
+def test_fused_scan_window_is_one_dispatch_per_block():
+    """The check_every window runs as one lax.scan dispatch: host syncs are
+    ceil(iters/k)+1 and the fit history still has one entry per sweep."""
+    t = random_sparse((24, 16, 10), 700, seed=9, distribution="powerlaw")
+    res = cpd_als_fused(t, rank=3, n_iters=7, kappa=2, tol=-1.0,
+                        check_every=3)
+    assert res.iters == 7
+    assert len(res.fits) == 7              # 3 + 3 + 1 (remainder block)
+    assert res.host_syncs == 3 + 1         # one per window + final
 
 
 def test_fused_exact_recovery():

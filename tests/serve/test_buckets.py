@@ -1,0 +1,108 @@
+"""Bucketing policy: nnz quantization, zero-padding, and the
+padding-invariance guarantee (padded decomposition bit-identical)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests fall back to fixed examples
+    HAVE_HYPOTHESIS = False
+
+from repro.core import cpd_als_fused, random_sparse
+from repro.serve import BatchedEngine, Bucket, BucketPolicy, pad_tensor
+
+
+def test_quantum_rounding():
+    p = BucketPolicy()                      # quantum=128, min_cap=128
+    assert p.nnz_cap(1) == 128
+    assert p.nnz_cap(128) == 128
+    assert p.nnz_cap(129) == 256
+    assert p.nnz_cap(700) == 768
+    # worst-case padding fraction is quantum/cap -> small for real streams
+    assert Bucket((8, 8, 8), p.nnz_cap(700)).padding_fraction(700) < 0.15
+
+
+def test_geometric_rounding():
+    p = BucketPolicy(mode="geometric", growth=1.5, min_cap=64)
+    caps = [p.nnz_cap(n) for n in (1, 64, 65, 100, 1000)]
+    assert caps[0] == caps[1] == 64
+    assert all(c >= n for c, n in zip(caps, (1, 64, 65, 100, 1000)))
+    assert all(b >= a for a, b in zip(caps, caps[1:]))    # monotone
+    # bounded relative padding: cap/nnz <= growth (up to ceil rounding)
+    assert p.nnz_cap(1000) / 1000 <= 1.5 + 0.01
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        BucketPolicy(mode="nope").nnz_cap(10)
+
+
+def test_degenerate_policy_params_rejected():
+    with pytest.raises(ValueError):
+        BucketPolicy(mode="geometric", growth=1.0)    # would loop forever
+    with pytest.raises(ValueError):
+        BucketPolicy(quantum=0)
+
+
+def test_bucket_for_groups_same_shape_and_cap():
+    p = BucketPolicy()
+    a = random_sparse((20, 12, 8), 400, seed=0)
+    b = random_sparse((20, 12, 8), 390, seed=1)
+    c = random_sparse((20, 12, 9), 400, seed=2)   # different shape
+    assert p.bucket_for(a) == p.bucket_for(b) == Bucket((20, 12, 8), 512)
+    assert p.bucket_for(c) != p.bucket_for(a)
+
+
+def test_pad_tensor_appends_zero_entries_at_origin():
+    t = random_sparse((15, 11, 7), 200, seed=3)
+    padded = pad_tensor(t, 256)
+    assert padded.nnz == 256 and padded.shape == t.shape
+    assert np.array_equal(padded.indices[:200], t.indices)
+    assert np.array_equal(padded.values[:200], t.values)
+    assert np.all(padded.indices[200:] == 0)
+    assert np.all(padded.values[200:] == 0.0)
+    assert pad_tensor(t, t.nnz) is t              # no-op passthrough
+    with pytest.raises(ValueError):
+        pad_tensor(t, 100)
+
+
+def _padding_invariance_case(nnz: int, seed: int, backend: str):
+    """Factors from the padded tensor are BIT-identical to the unpadded
+    ones: zero entries at the origin add exactly +0.0 to every
+    accumulation, and all layout sorts are stable."""
+    t = random_sparse((14, 11, 9), nnz, seed=seed, distribution="powerlaw")
+    kw = dict(rank=3, kappa=2, n_iters=3, tol=-1.0, seed=seed,
+              backend=backend)
+    a = cpd_als_fused(t, **kw)
+    b = cpd_als_fused(pad_tensor(t, 256), **kw)
+    for Fa, Fb in zip(a.factors, b.factors):
+        assert np.array_equal(Fa, Fb)
+    assert np.array_equal(a.weights, b.weights)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from([180, 200, 230]), st.integers(0, 5),
+           st.sampled_from(["segment", "coo"]))
+    def test_property_padding_invariance(nnz, seed, backend):
+        _padding_invariance_case(nnz, seed, backend)
+else:
+    @pytest.mark.parametrize("nnz,seed,backend",
+                             [(180, 0, "segment"), (200, 3, "coo"),
+                              (230, 5, "segment")])
+    def test_property_padding_invariance(nnz, seed, backend):
+        """Fixed-example fallback when hypothesis is unavailable."""
+        _padding_invariance_case(nnz, seed, backend)
+
+
+def test_batched_engine_padding_invariant():
+    """The vmapped engine gives the same bits whether a tensor fills its
+    bucket exactly or is padded up to it."""
+    t = random_sparse((14, 11, 9), 200, seed=7, distribution="powerlaw")
+    eng = BatchedEngine(rank=3, kappa=2, backend="segment", check_every=2)
+    exact = eng.decompose_batch([t], n_iters=3, tol=-1.0, seeds=[1])[0]
+    padded = eng.decompose_batch([t], n_iters=3, tol=-1.0, seeds=[1],
+                                 nnz_cap=256)[0]
+    for Fa, Fb in zip(exact.factors, padded.factors):
+        assert np.array_equal(Fa, Fb)

@@ -8,7 +8,10 @@ Measures, per Table-3 dataset generator (CI-scaled):
   * host syncs per iteration for both engines (the overhead the paper's
     thesis says dominates the small-tensor regime) — asserted, not just
     reported: the fused engine must do <= 1 sync per ``CHECK_EVERY``
-    iterations (+1 final materialization).
+    iterations (+1 final materialization);
+  * the partition plan each timed config ran under (per-mode block_rows /
+    tile / rank_block / slab cap, via ``core.plan``), so a perf regression
+    is attributable to a planning change rather than guessed at.
 
 Output: ``name,us_per_call,derived`` CSV like the other sections.
 """
@@ -18,7 +21,7 @@ import time
 
 import numpy as np
 
-from repro.core import cpd_als, make_plan
+from repro.core import cpd_als, make_plan, plan_tensor
 from repro.core.als_device import cpd_als_fused
 
 from .common import KAPPA, load_datasets
@@ -31,6 +34,9 @@ CHECK_EVERY = 2
 def bench_one(name, tensor, *, rank=RANK, iters=ITERS,
               check_every=CHECK_EVERY) -> dict:
     plan = make_plan(tensor, KAPPA)
+    # The static plan this tensor's bucket class executes under — printed
+    # with every timing row so planning changes are attributable.
+    pplan = plan_tensor(tensor, rank, KAPPA)
 
     # Warm-up both engines (jit compile + plan device upload), then time.
     cpd_als(tensor, rank, plan=plan, n_iters=1, tol=-1.0, engine="host")
@@ -64,6 +70,7 @@ def bench_one(name, tensor, *, rank=RANK, iters=ITERS,
         "speedup": host_s / max(fused_s, 1e-12),
         "host_syncs_per_iter": host.host_syncs / iters,
         "fused_syncs_per_iter": fused.host_syncs / iters,
+        "plan": pplan.describe(),
     }
 
 
@@ -80,7 +87,7 @@ def main():
               f"syncs_per_iter={r['host_syncs_per_iter']:.1f}")
         print(f"als/{r['dataset']}/fused,{r['fused_s_per_iter']*1e6:.0f},"
               f"syncs_per_iter={r['fused_syncs_per_iter']:.2f};"
-              f"speedup={r['speedup']:.2f}x")
+              f"speedup={r['speedup']:.2f}x;plan={r['plan']}")
     gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
     print(f"als/geomean-speedup,0,{gmean:.2f}x")
 

@@ -1,0 +1,88 @@
+"""Distributed ALS smoke benchmark: the shard_map fused sweep on a
+virtual 8-device CPU mesh.
+
+jax pins its device count at first init, so the measured run happens in a
+fresh subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count``
+set — the same trick ``tests/distributed`` uses — and this module just
+parses its CSV back out.  Measured per Table-3-style tensor:
+
+  * wall time per ALS iteration for single-device fused vs distributed
+    (8 virtual devices; on CPU the shards serialize, so this is a
+    correctness/overhead smoke, not a scaling claim);
+  * host syncs per iteration for the distributed engine — asserted <= 1
+    per ``check_every`` window (+1 final), i.e. zero per-iteration syncs
+    inside a window;
+  * the fp32 agreement of the final fit with the single-device engine.
+
+Output: ``name,us_per_call,derived`` CSV like the other sections.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+DEVICES = 8
+
+_CHILD = """
+    import time
+    import numpy as np
+    from repro.core import cpd_als, random_sparse
+    from repro.core.distributed import cpd_als_distributed, make_distributed_plan
+
+    ITERS, CHECK = 6, 3
+    for name, shape, nnz in (("uber-like", (60, 24, 160), 2000),
+                             ("tiny-mode", (48, 32, 6), 1500)):
+        t = random_sparse(shape, nnz, seed=7, distribution="powerlaw")
+        # warm-up (compile + plan build), then time
+        single = cpd_als(t, rank=8, n_iters=1, tol=-1.0, check_every=1)
+        t0 = time.perf_counter()
+        single = cpd_als(t, rank=8, n_iters=ITERS, tol=-1.0,
+                         check_every=CHECK)
+        single_s = time.perf_counter() - t0
+
+        plan = make_distributed_plan(t)
+        cpd_als_distributed(t, rank=8, plan=plan, n_iters=CHECK, tol=-1.0,
+                            check_every=CHECK)
+        t0 = time.perf_counter()
+        dist = cpd_als_distributed(t, rank=8, plan=plan, n_iters=ITERS,
+                                   tol=-1.0, check_every=CHECK)
+        dist_s = time.perf_counter() - t0
+
+        assert dist.host_syncs <= ITERS // CHECK + 1, dist.host_syncs
+        assert abs(dist.fits[-1] - single.fits[-1]) < 1e-3, (
+            dist.fits[-1], single.fits[-1])
+        schemes = "/".join(m.scheme.name[0] + m.scheme.name[-1]
+                           for m in plan.modes)
+        print(f"dist/{name}/single,{single_s / ITERS * 1e6:.0f},"
+              f"fit={single.fits[-1]:.4f}")
+        print(f"dist/{name}/shard_map-8dev,{dist_s / ITERS * 1e6:.0f},"
+              f"fit={dist.fits[-1]:.4f};"
+              f"syncs_per_iter={dist.host_syncs / ITERS:.2f};"
+              f"schemes={schemes}")
+"""
+
+
+def run(devices: int = DEVICES) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(_CHILD)],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    if out.returncode != 0:
+        raise RuntimeError(f"distributed smoke failed:\n{out.stdout}\n"
+                           f"{out.stderr}")
+    return out.stdout
+
+
+def main():
+    print("name,us_per_call,derived")
+    print(run(), end="")
+
+
+if __name__ == "__main__":
+    main()

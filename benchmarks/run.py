@@ -42,6 +42,12 @@ def main() -> None:
         # assertions must not abort the remaining sections
         sections.append(("serving (batched service vs sequential runner)",
                          lambda: serve_bench.main(["--no-check"])))
+    if on("dist"):
+        from . import dist_bench
+        # subprocess with forced host devices: jax pins its device count
+        # at first init, so the 8-device mesh cannot share this process
+        sections.append(("distributed ALS smoke (shard_map, 8 virtual devices)",
+                         dist_bench.main))
     if on("roofline"):
         from . import roofline
         sections.append(("roofline table (from dry-run)", roofline.main))

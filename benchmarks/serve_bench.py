@@ -100,10 +100,17 @@ def bench_stream(name, stream, *, rank, n_iters, check_every, backend,
     bat_s = time.perf_counter() - t0
     snap = svc.snapshot()
 
+    # The static plan of the stream's dominant bucket (core.plan) — every
+    # timed row names its slab cap / tile / rank block so perf shifts are
+    # attributable to planning changes.
+    caps = sorted({policy.bucket_for(t).nnz_cap for t in stream})
+    bplan = svc.engine.bucket_plan(tuple(stream[0].shape), caps[-1])
+
     m = len(stream)
     return {
         "stream": name,
         "requests": m,
+        "plan": bplan.describe(),
         "seq_rps": m / seq_s,
         "bat_rps": m / bat_s,
         "speedup": seq_s / max(bat_s, 1e-12),
@@ -142,7 +149,7 @@ def main(argv=None):
                          "assertions (used by the aggregate benchmarks.run "
                          "so a loaded box cannot abort later sections)")
     ap.add_argument("--backend", default="segment",
-                    choices=["segment", "coo"])
+                    choices=["segment", "coo", "pallas"])
     ap.add_argument("--max-batch", type=int, default=MAX_BATCH)
     ap.add_argument("--rank", type=int, default=RANK)
     args = ap.parse_args(argv)
@@ -161,7 +168,8 @@ def main(argv=None):
               f"occ={r['batch_occupancy']*100:.0f}%;"
               f"p50={r['latency_p50_s']*1e3:.0f}ms;"
               f"p99={r['latency_p99_s']*1e3:.0f}ms;"
-              f"cache_hit={r['cache_hit_rate']*100:.0f}%")
+              f"cache_hit={r['cache_hit_rate']*100:.0f}%;"
+              f"plan={r['plan']}")
     gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
     worst_pad = max(r["padding_overhead"] for r in rows)
     print(f"serve/geomean-speedup,0,{gmean:.2f}x")

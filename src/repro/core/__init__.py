@@ -16,8 +16,13 @@ from .load_balance import (DeviceProfile, Partitioning, Scheme,
                            choose_scheme_cost_based, partition_mode,
                            scheme_cost)
 from .mttkrp import MTTKRPPlan, make_plan, mttkrp, mttkrp_dense_ref
+from .plan import (DeviceShards, ModePlan, PartitionPlan,
+                   build_device_shards, plan_bucket, plan_layout,
+                   plan_tensor, quantize_nnz, slab_cap)
 
 __all__ = [
+    "DeviceShards", "ModePlan", "PartitionPlan", "build_device_shards",
+    "plan_bucket", "plan_layout", "plan_tensor", "quantize_nnz", "slab_cap",
     "SparseTensor", "frostt_like", "low_rank_sparse", "random_sparse",
     "CPDResult", "cpd_als", "cpd_als_fused", "sweep_cache_stats",
     "ModeLayout", "build_all_mode_layouts", "build_mode_layout", "format_memory_report",

@@ -47,7 +47,6 @@ import jax.numpy as jnp
 from jax import lax
 from jax.scipy import linalg as jsla
 
-from ..kernels import ops as kops
 from ..kernels import ref as kref
 from ..kernels.mttkrp_pallas import mttkrp_pallas
 from .coo import SparseTensor
@@ -65,6 +64,20 @@ def _pinv(a):
     return jnp.linalg.pinv(a, **{_PINV_KW: 1e-10})
 
 
+def resolve_solver(solver: str) -> str:
+    """Resolve 'auto' to the per-backend normal-equations solver (shared
+    by the fused, batched, and distributed engines so the same
+    configuration can never pick different solvers by front door):
+    'cho' (Cholesky — best on TPU/GPU) off-CPU, 'inv' (LU inverse) on
+    CPU, where XLA's Cholesky/TriangularSolve custom calls cost ~5 ms
+    even at R=16."""
+    if solver == "auto":
+        solver = "cho" if jax.default_backend() != "cpu" else "inv"
+    if solver not in ("cho", "inv"):
+        raise ValueError(f"unknown solver {solver!r}")
+    return solver
+
+
 # ---------------------------------------------------------------------------
 # Closure-free sweep builder (shared by the sequential and batched engines)
 # ---------------------------------------------------------------------------
@@ -74,16 +87,30 @@ def _pinv(a):
 def build_sweep_fn(backend: str, nmodes: int, rank: int,
                    shapes: tuple[int, ...],
                    pallas_meta: tuple | None,
-                   interpret: bool, solver: str):
+                   interpret: bool, solver: str,
+                   axis: str | None = None,
+                   fallback: str = "cond"):
     """Build (and cache) the *pure* one-full-sweep function for a static
     configuration: ``sweep(state, mode_data_all, fit_data) -> (state, fit)``.
 
     All runtime data (layout arrays, nnz coordinates, fit inputs) are
     arguments — the function closes over nothing but static ints — so it
-    can be jitted directly (sequential engine) or ``jax.vmap``-ed over a
-    stacked leading axis (``serve.batched_engine``): every tensor of the
-    same (shape, nnz-bucket) class shares this one function object.
+    can be jitted directly (sequential engine), ``jax.vmap``-ed over a
+    stacked leading axis (``serve.batched_engine``), or run inside
+    ``shard_map`` (``core.distributed``): every tensor of the same
+    (shape, nnz-bucket) class shares this one function object.
+
+    ``axis``: a mesh axis name — mode data and fit data are then
+    device-local shards and the sweep ``psum``s the partial MTTKRP output
+    and the fit inner product over that axis (the distributed path).
+    ``fallback``: 'cond' guards the solve with the pinv rescue (the
+    sequential default); 'none' omits it so a batch-level all-finite cond
+    can be hoisted AROUND the whole window (``serve.batched_engine``) —
+    under vmap the per-element cond would lower to a select that always
+    pays the small-R SVD.
     """
+    if fallback not in ("cond", "none"):
+        raise ValueError(f"unknown fallback {fallback!r}")
     in_modes = [tuple(w for w in range(nmodes) if w != d)
                 for d in range(nmodes)]
 
@@ -94,6 +121,8 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
             out = kref.mttkrp_sorted_segments(
                 idx, rows, vals, [factors[w] for w in in_modes[d]], shapes[d]
             )
+            if axis is not None:      # combine per-device partials
+                out = lax.psum(out, axis)
             return jnp.zeros_like(out).at[row_perm].set(out)
         if backend == "pallas":
             rb_of, first, idxp, valsp, lrowsp, row_perm = mode_data
@@ -104,12 +133,17 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
                 num_row_blocks=nrb, block_rows=br, tile=tile,
                 rank_block=rblk, interpret=interpret,
             )[: shapes[d]]
+            if axis is not None:
+                out = lax.psum(out, axis)
             return jnp.zeros_like(out).at[row_perm].set(out)
         if backend == "coo":
             indices, values = mode_data
-            return kref.mttkrp_coo(
+            out = kref.mttkrp_coo(
                 indices, values, list(factors), d, shapes[d]
             )
+            if axis is not None:
+                out = lax.psum(out, axis)
+            return out
         raise ValueError(f"unknown backend {backend!r}")
 
     def sweep(state, mode_data_all, fit_data):
@@ -136,13 +170,15 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
             # lax.cond (not jnp.where) so the SVD-based pinv only runs on
             # the rare singular miss, never in the hot path.  (Under vmap
             # the cond lowers to a select and both branches run — the
-            # batched engine pays the small-R SVD for robustness.)
-            Yd = lax.cond(
-                jnp.all(jnp.isfinite(Yd)),
-                lambda yd, m, v: yd,
-                lambda yd, m, v: m @ _pinv(v),
-                Yd, M, Vr,
-            )
+            # batched engine therefore builds fallback='none' sweeps and
+            # hoists one batch-level all-finite cond around the window.)
+            if fallback == "cond":
+                Yd = lax.cond(
+                    jnp.all(jnp.isfinite(Yd)),
+                    lambda yd, m, v: yd,
+                    lambda yd, m, v: m @ _pinv(v),
+                    Yd, M, Vr,
+                )
             lam = jnp.linalg.norm(Yd, axis=0)
             lam = jnp.where(lam > 1e-12, lam, 1.0)
             Yd = Yd / lam
@@ -159,6 +195,8 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
         for d in range(nmodes):
             acc = acc * factors[d][indices[:, d]]
         ip = values @ (acc @ weights)
+        if axis is not None:          # nnz are sharded across devices
+            ip = lax.psum(ip, axis)
         V = jnp.ones((rank, rank), jnp.float32)
         for g in grams:
             V = V * g
@@ -218,16 +256,11 @@ def _collect_mode_data(plan: MTTKRPPlan, backend: str, rank: int):
         datas, metas = [], []
         for d in range(N):
             packed = plan.packed(d)
-            factor_rows = sum(plan.tensor.shape[w]
-                              for w in packed.input_modes)
-            rblk = kops.auto_rank_block(
-                rank, packed.block_rows, packed.tile, factor_rows,
-                len(packed.input_modes)
-            ) or rank
+            mp = plan.mode_plan(d, rank)    # core.plan decides rank_block
             dev = plan.device_packed(d)
             datas.append(dev + (jnp.asarray(plan.layouts[d].row_perm),))
             metas.append((packed.num_row_blocks, packed.block_rows,
-                          packed.tile, rblk))
+                          packed.tile, mp.rank_block))
         return tuple(datas), tuple(metas)
     if backend == "coo":
         coo = plan.device_coo()
@@ -293,10 +326,7 @@ def cpd_als_fused(
     if donate is None:
         # Buffer donation is a no-op (with a warning) on CPU.
         donate = jax.default_backend() != "cpu"
-    if solver == "auto":
-        solver = "cho" if jax.default_backend() != "cpu" else "inv"
-    if solver not in ("cho", "inv"):
-        raise ValueError(f"unknown solver {solver!r}")
+    solver = resolve_solver(solver)
 
     if plan is None and backend == "coo":
         # The coo backend needs no mode-specific layouts: skip the host-side

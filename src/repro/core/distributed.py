@@ -1,122 +1,68 @@
-"""Distributed spMTTKRP via shard_map — κ partitions ↦ κ devices.
+"""Distributed spMTTKRP + fused CPD-ALS via shard_map — κ partitions ↦ κ devices.
 
 The paper maps κ tensor partitions onto κ GPU SMs.  Here κ is the device
-count of a 1-D mesh axis (named "sm" in homage).  The two load-balancing
-schemes become two communication patterns:
+count of a 1-D mesh axis (named "sm" in homage).  Per-device shards come
+from the single planning layer (``core.plan.build_device_shards``): each
+device holds a rectangular, zero-padded slice of the mode layout with
+GLOBAL relabeled rows, computes a partial (I_d, R) MTTKRP, and a single
+``psum`` combines the partials:
 
-  Scheme 1 (I_d ≥ κ): each device owns a disjoint, contiguous block of
-    *relabeled* output rows and exactly the nonzeros incident on them.
-    Output factor shards never leave the device — zero collective traffic
-    for the update (the paper's "local atomics only", exceeded: not even
-    local atomics, just a segmented reduce).  Input factor matrices are
-    replicated (all-gathered once per mode, small in the paper's regime).
+  Scheme 1 (I_d ≥ κ): partials have disjoint row support, so the psum is
+    mathematically a concatenation — but it still transfers the full
+    (I_d, R) array per device.  A row-sharded output path that skips the
+    collective entirely (the paper's "local atomics only" property, which
+    the pre-plan host loop kept) is a recorded ROADMAP follow-up; the
+    unified psum buys one executable for both schemes and the fused
+    window in exchange.
+  Scheme 2 (I_d < κ): partials overlap and the psum genuinely reduces —
+    the analogue of global atomics, chosen exactly when I_d < κ so the
+    payload is tiny.
 
-  Scheme 2 (I_d < κ): nonzeros are split equally; every device produces a
-    dense (I_d, R) partial result and a single psum combines them — the
-    TPU-native analogue of the paper's global atomic updates.  Because
-    this path is chosen exactly when I_d < κ, the psum payload is tiny.
-
-Preprocessing (`DistributedPlan`) pads per-device slices to a common shape
-so shard_map sees rectangular arrays; padding entries carry value 0.
+``cpd_als_distributed`` is the fused engine's distributed twin: it runs
+``core.als_device.build_sweep_fn(axis="sm")`` — the SAME closure-free
+sweep the sequential and batched engines execute, with psums at the two
+shard-crossing points — under ``shard_map``, scanning a whole
+``check_every`` window as ONE dispatch.  The host syncs only at window
+boundaries (the fit scalar), never inside a window: zero per-iteration
+host traffic, matching the single-device fused engine's contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Sequence
+import functools
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
 try:
     from jax import shard_map
 except ImportError:  # older jax keeps shard_map under experimental
     from jax.experimental.shard_map import shard_map
 
-from ..kernels import ref as kref
+import time
+
+from . import plan as plan_mod
+from .als_device import build_sweep_fn, init_state, resolve_solver
 from .coo import SparseTensor
-from .layout import ModeLayout, build_mode_layout
+from .cpd import CPDResult
+from .layout import build_mode_layout
 from .load_balance import Scheme
 
 AXIS = "sm"
 
 
-@dataclasses.dataclass(frozen=True)
-class DistributedModeArrays:
-    """Rectangular per-device arrays for one mode (leading dim = κ)."""
-
-    scheme: Scheme
-    num_rows: int                 # I_d
-    rows_per_dev: int             # padded relabeled rows per device (scheme 1)
-    idx: np.ndarray               # (κ, max_nnz, W) int32 input-mode indices
-    rows_local: np.ndarray        # (κ, max_nnz) int32 device-local output rows
-    vals: np.ndarray              # (κ, max_nnz) f32 (0 on padding)
-    row_gather: np.ndarray        # (I_d, 2) int32: original row -> (device, local row)
-    input_modes: tuple[int, ...]
-
-
-def build_distributed_mode(layout: ModeLayout) -> DistributedModeArrays:
-    κ = layout.kappa
-    in_modes = layout.input_modes()
-    off = layout.part_offsets
-    max_nnz = int(np.diff(off).max()) if layout.nnz else 1
-    max_nnz = max(max_nnz, 1)
-    W = len(in_modes)
-    idx = np.zeros((κ, max_nnz, W), np.int32)
-    vals = np.zeros((κ, max_nnz), np.float32)
-    rows_local = np.zeros((κ, max_nnz), np.int32)
-
-    if layout.scheme == Scheme.INDEX_PARTITION:
-        rows_per_dev = int((layout.row_hi - layout.row_lo).max()) if κ else 0
-        rows_per_dev = max(rows_per_dev, 1)
-    else:
-        rows_per_dev = layout.num_rows
-
-    for p in range(κ):
-        s, e = int(off[p]), int(off[p + 1])
-        n = e - s
-        idx[p, :n] = layout.indices[s:e][:, in_modes]
-        vals[p, :n] = layout.values[s:e]
-        if layout.scheme == Scheme.INDEX_PARTITION:
-            rows_local[p, :n] = layout.rows[s:e] - layout.row_lo[p]
-        else:
-            rows_local[p, :n] = layout.rows[s:e]
-        # padding rows point at local row 0 with value 0 — harmless.
-
-    # original row -> (device, local slot) for reassembly (scheme 1).
-    row_gather = np.zeros((layout.num_rows, 2), np.int32)
-    if layout.scheme == Scheme.INDEX_PARTITION:
-        for p in range(κ):
-            lo, hi = int(layout.row_lo[p]), int(layout.row_hi[p])
-            rel = np.arange(lo, hi)
-            orig = layout.row_perm[rel]
-            row_gather[orig, 0] = p
-            row_gather[orig, 1] = rel - lo
-    else:
-        row_gather[:, 0] = 0
-        row_gather[:, 1] = np.arange(layout.num_rows)
-
-    return DistributedModeArrays(
-        scheme=layout.scheme,
-        num_rows=layout.num_rows,
-        rows_per_dev=rows_per_dev,
-        idx=idx,
-        rows_local=rows_local,
-        vals=vals,
-        row_gather=row_gather,
-        input_modes=tuple(in_modes),
-    )
-
-
 @dataclasses.dataclass
 class DistributedPlan:
-    """All-modes distributed MTTKRP plan over a 1-D device mesh."""
+    """All-modes distributed plan over a 1-D device mesh: one
+    ``core.plan.DeviceShards`` per mode plus sharded fit data."""
 
     tensor: SparseTensor
     mesh: Mesh
-    modes: list[DistributedModeArrays]
+    modes: list[plan_mod.DeviceShards]
+    fit_shards: tuple  # (idx (κ,per,N), vals (κ,per), norm_sq (κ,))
 
     @property
     def kappa(self) -> int:
@@ -135,64 +81,172 @@ def make_distributed_plan(
     κ = int(mesh.devices.size)
     modes = []
     for d in range(tensor.nmodes):
-        lay = build_mode_layout(tensor, d, κ, scheme=scheme, assignment=assignment)
-        modes.append(build_distributed_mode(lay))
-    return DistributedPlan(tensor=tensor, mesh=mesh, modes=modes)
+        lay = build_mode_layout(tensor, d, κ, scheme=scheme,
+                                assignment=assignment)
+        modes.append(plan_mod.build_device_shards(lay))
+    fit = plan_mod.shard_fit_data(tensor, κ)
+    return DistributedPlan(tensor=tensor, mesh=mesh, modes=modes,
+                           fit_shards=fit)
 
 
-@partial(jax.jit, static_argnames=("rows_per_dev", "mesh_", "scheme1"))
-def _dist_mttkrp(idx, rows_local, vals, factors, rows_per_dev, mesh_, scheme1):
-    """shard_map body dispatcher (jitted once per shape/scheme)."""
-    mesh = mesh_
+# ---------------------------------------------------------------------------
+# One-shot distributed MTTKRP (kept for benchmarks / the kernel oracle)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "mesh_"))
+def _dist_mttkrp(idx, rows, vals, factors, num_rows, mesh_):
+    """shard_map body dispatcher (jitted once per shape)."""
+    from ..kernels import ref as kref
 
     def body(idx_s, rows_s, vals_s, *facs):
-        # idx_s: (1, max_nnz, W); squeeze the device dim.
         out = kref.mttkrp_sorted_segments(
-            idx_s[0], rows_s[0], vals_s[0], list(facs), rows_per_dev
+            idx_s[0], rows_s[0], vals_s[0], list(facs), num_rows
         )
-        if not scheme1:
-            out = jax.lax.psum(out, AXIS)
-        return out[None]
+        return lax.psum(out, AXIS)
 
     in_specs = (P(AXIS), P(AXIS), P(AXIS)) + tuple(P() for _ in factors)
-    out_specs = P(AXIS) if scheme1 else P(None)
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
-    return fn(idx, rows_local, vals, *factors)
+    fn = shard_map(body, mesh=mesh_, in_specs=in_specs, out_specs=P(),
+                   check_rep=False)
+    return fn(idx, rows, vals, *factors)
 
 
 def mttkrp_distributed(
     plan: DistributedPlan,
-    factors: Sequence[jnp.ndarray],
+    factors,
     mode: int,
 ) -> jnp.ndarray:
     """Distributed MTTKRP along ``mode``; returns (I_d, R) f32, original rows."""
     m = plan.modes[mode]
     facs = tuple(jnp.asarray(factors[w]) for w in m.input_modes)
-    scheme1 = m.scheme == Scheme.INDEX_PARTITION
     out = _dist_mttkrp(
         jnp.asarray(m.idx),
-        jnp.asarray(m.rows_local),
+        jnp.asarray(m.rows),
         jnp.asarray(m.vals),
         facs,
-        rows_per_dev=m.rows_per_dev,
+        num_rows=m.num_rows,
         mesh_=plan.mesh,
-        scheme1=scheme1,
     )
-    # out: (κ, rows_per_dev, R) for scheme 1; (κ, I_d, R) replicated for 2.
-    if scheme1:
-        dev = jnp.asarray(m.row_gather[:, 0])
-        slot = jnp.asarray(m.row_gather[:, 1])
-        return out[dev, slot]
-    return out[0]
+    # relabeled -> original rows (replicated output, replicated gather).
+    return jnp.zeros_like(out).at[jnp.asarray(m.row_perm[0])].set(out)
 
 
-def cpd_als_distributed(tensor: SparseTensor, rank: int, mesh: Mesh | None = None, **kw):
-    """CPD-ALS with the distributed engine (drop-in for core.cpd.cpd_als)."""
-    from .cpd import cpd_als
+# ---------------------------------------------------------------------------
+# Fused distributed ALS (shard_map of the one-dispatch-per-window sweep)
+# ---------------------------------------------------------------------------
 
-    dplan = make_distributed_plan(tensor, mesh)
 
-    def engine(_plan, factors, mode):
-        return mttkrp_distributed(dplan, factors, mode)
+@functools.lru_cache(maxsize=None)
+def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
+                            shapes: tuple[int, ...], solver: str,
+                            block: int):
+    """Jitted shard_map of ``block`` consecutive distributed sweeps.
 
-    return cpd_als(tensor, rank, mttkrp_fn=engine, **kw)
+    The body squeezes each device's leading shard dim and scans the SAME
+    sweep the fused engine uses (``build_sweep_fn`` with ``axis=AXIS``):
+    the whole check window is one dispatch, partial MTTKRPs psum inside
+    it, and state stays replicated (identical on every device because the
+    psummed inputs are identical).  Cached per (mesh, shapes, rank,
+    solver, window) — shard caps live in the array shapes, so same-class
+    tensors reuse the executable."""
+    sweep = build_sweep_fn("segment", nmodes, rank, shapes, None, True,
+                           solver, axis=AXIS)
+
+    def body(state, *flat):
+        md = tuple(
+            tuple(jnp.squeeze(a, 0) for a in flat[4 * d: 4 * d + 4])
+            for d in range(nmodes)
+        )
+        fd = tuple(jnp.squeeze(a, 0) for a in flat[4 * nmodes:])
+
+        def step(st, _):
+            return sweep(st, md, fd)
+
+        state, fits = lax.scan(step, state, xs=None, length=block)
+        return state, fits
+
+    n_sharded = 4 * nmodes + 3
+    fn = shard_map(
+        body, mesh=mesh_,
+        in_specs=(P(),) + tuple(P(AXIS) for _ in range(n_sharded)),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def _collect_dist_data(plan: DistributedPlan):
+    """Flat per-mode + fit device arrays in the order the body expects."""
+    flat = []
+    for m in plan.modes:
+        flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
+                 jnp.asarray(m.vals), jnp.asarray(m.row_perm)]
+    flat += [jnp.asarray(a) for a in plan.fit_shards]
+    return flat
+
+
+def cpd_als_distributed(
+    tensor: SparseTensor,
+    rank: int,
+    mesh: Mesh | None = None,
+    *,
+    plan: DistributedPlan | None = None,
+    n_iters: int = 25,
+    tol: float = 1e-5,
+    seed: int = 0,
+    check_every: int = 1,
+    solver: str = "auto",
+    verbose: bool = False,
+) -> CPDResult:
+    """Distributed CPD-ALS: the fused one-dispatch-per-window sweep under
+    shard_map.  Same init and update order as single-device ``cpd_als``
+    (identical seed ⇒ matching factors to fp32 tolerance); the host
+    fetches only the window-boundary fit scalar — zero per-iteration
+    syncs inside a check window."""
+    t_start = time.perf_counter()
+    if plan is None:
+        plan = make_distributed_plan(tensor, mesh)
+    N = tensor.nmodes
+    shapes = tuple(int(s) for s in tensor.shape)
+    check_every = max(1, int(check_every))
+    solver = resolve_solver(solver)
+
+    state = init_state(tensor.shape, rank, seed)
+    flat = _collect_dist_data(plan)
+
+    n_blocks, rem = divmod(n_iters, check_every)
+    fn_k = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
+                                   check_every) if n_blocks else None
+    fn_rem = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
+                                     rem) if rem else None
+
+    fits_dev: list = []
+    host_syncs = 0
+    last_fit = -np.inf
+    it = 0
+    for b in range(n_blocks + (1 if rem else 0)):
+        k = check_every if b < n_blocks else rem
+        fn = fn_k if b < n_blocks else fn_rem
+        state, fits_blk = fn(state, *flat)
+        fits_dev.append(fits_blk)
+        it += k
+        f = float(fits_blk[-1])                 # the only in-loop host sync
+        host_syncs += 1
+        if verbose:
+            print(f"  ALS iter {it:3d}: fit={f:.6f} (distributed)")
+        if abs(f - last_fit) < tol:
+            break
+        last_fit = f
+
+    host_syncs += 1                             # final materialization
+    fits = [float(f) for blk in jax.device_get(fits_dev) for f in blk]
+    return CPDResult(
+        factors=[np.asarray(F) for F in state[0]],
+        weights=np.asarray(state[2], dtype=np.float64),
+        fits=fits,
+        iters=it,
+        mttkrp_seconds=0.0,
+        total_seconds=time.perf_counter() - t_start,
+        host_syncs=host_syncs,
+        engine="distributed",
+    )

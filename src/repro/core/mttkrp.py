@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from ..kernels import ops as kops
 from ..kernels import ref as kref
 from ..kernels.mttkrp_pallas import mttkrp_pallas
+from . import plan as plan_mod
 from .coo import SparseTensor
 from .layout import ModeLayout, build_all_mode_layouts
 from .load_balance import Scheme
@@ -33,7 +34,11 @@ class MTTKRPPlan:
     """Preprocessing product: all mode copies + (lazily) packed slabs.
 
     This is the paper's "mode-specific tensor format": built once, reused
-    for every ALS iteration along every mode.
+    for every ALS iteration along every mode.  When a ``partition``
+    (``core.plan.PartitionPlan``) is attached, every packing follows its
+    static per-mode decisions — same plan in, same array shapes out, which
+    is what lets the sequential path produce bit-identical results to the
+    plan's vmapped and distributed consumers.
     """
 
     tensor: SparseTensor
@@ -42,6 +47,7 @@ class MTTKRPPlan:
     assignment: str = "greedy"
     block_rows: int = kops.DEFAULT_BLOCK_ROWS
     tile: int = kops.DEFAULT_TILE
+    partition: plan_mod.PartitionPlan | None = None
     _packed: dict[int, kops.PackedModeLayout] = dataclasses.field(default_factory=dict)
     _dev_arrays: dict[int, tuple] = dataclasses.field(default_factory=dict)
     _dev_packed: dict[int, tuple] = dataclasses.field(default_factory=dict)
@@ -49,10 +55,29 @@ class MTTKRPPlan:
 
     def packed(self, mode: int) -> kops.PackedModeLayout:
         if mode not in self._packed:
-            self._packed[mode] = kops.pack_layout(
-                self.layouts[mode], block_rows=self.block_rows, tile=self.tile
-            )
+            if self.partition is not None:
+                mp = self.partition.modes[mode]
+                self._packed[mode] = kops.pack_layout(
+                    self.layouts[mode], block_rows=mp.block_rows,
+                    tile=mp.tile, num_slabs_cap=mp.slab_cap,
+                )
+            else:
+                self._packed[mode] = kops.pack_layout(
+                    self.layouts[mode], block_rows=self.block_rows,
+                    tile=self.tile,
+                )
         return self._packed[mode]
+
+    def mode_plan(self, mode: int, rank: int) -> plan_mod.ModePlan:
+        """The static per-mode plan this tensor executes under: the
+        attached partition plan when present (bucket semantics), else a
+        per-layout plan pinned to the actual packing's tiling.  All
+        rank-block decisions flow through here (core.plan's cost model)."""
+        if self.partition is not None and self.partition.rank == rank:
+            return self.partition.modes[mode]
+        p = self.packed(mode)
+        return plan_mod.plan_layout(self.layouts[mode], rank,
+                                    block_rows=p.block_rows, tile=p.tile)
 
     def device_arrays(self, mode: int):
         """Layout arrays as jnp device arrays (cached)."""
@@ -101,6 +126,7 @@ def make_plan(
     policy: str = "threshold",
     block_rows: int = kops.DEFAULT_BLOCK_ROWS,
     tile: int = kops.DEFAULT_TILE,
+    partition: plan_mod.PartitionPlan | None = None,
 ) -> MTTKRPPlan:
     layouts = build_all_mode_layouts(
         tensor, kappa, scheme=scheme, assignment=assignment, policy=policy
@@ -112,6 +138,7 @@ def make_plan(
         assignment=assignment,
         block_rows=block_rows,
         tile=tile,
+        partition=partition,
     )
 
 
@@ -152,11 +179,7 @@ def mttkrp(
         packed = plan.packed(mode)
         if rank_block is None:
             rank = int(in_factors[0].shape[1])
-            factor_rows = sum(int(f.shape[0]) for f in in_factors)
-            rank_block = kops.auto_rank_block(
-                rank, packed.block_rows, packed.tile, factor_rows,
-                len(in_factors)
-            ) or rank
+            rank_block = plan.mode_plan(mode, rank).rank_block
         rb_of, first, idxp, valsp, lrowsp = plan.device_packed(mode)
         out_rel = mttkrp_pallas(
             rb_of, first, idxp, valsp, lrowsp, in_factors,

@@ -1,0 +1,325 @@
+"""Static-shape partition plans: ONE planning layer for every execution path.
+
+The paper's partitioning step (distribute nonzeros across SMs by sparsity
+and dimensions) used to be re-derived ad hoc in three places — kernel slab
+packing (`kernels.ops`), serving bucket padding (`serve.buckets`), and
+per-device splits (`core.distributed`) — each with data-dependent shapes
+that blocked composition with ``jax.vmap`` and ``shard_map``.  Following
+the multi-GPU extension of this planning step (AMPED, arXiv 2507.15121)
+and the fixed-granule load balancing of Nisa et al. (arXiv 1904.03329),
+this module commits to **static-shape partition artifacts decided once**:
+
+    ModeLayout / bucket class
+            |
+       PartitionPlan            (this module: cost model -> static caps)
+            |
+    +-------+-------------------+----------------------+
+    | Pallas packing            | vmapped batch        | shard_map shards
+    | (kernels.ops.pack_layout  | (serve.batched_engine| (core.distributed
+    |  padded to slab_cap)      |  stacks bucket-mates)|  psum partials)
+    +---------------------------+----------------------+
+
+Three static quantities make the composition work:
+
+  * ``quantize_nnz`` — the nnz cap of a (shape, nnz-bucket) request class.
+    ``serve.buckets.BucketPolicy`` delegates here, so padding policy and
+    kernel packing can never disagree on what a bucket holds.
+  * ``slab_cap``     — an nnz-independent upper bound on the packed grid
+    size: any tensor with ``nnz <= nnz_cap`` packs into at most
+    ``ceil(I_d / block_rows) + nnz_cap // tile`` slabs.  Packing padded up
+    to this cap (appended all-zero slabs on the last row block) is
+    bit-identical to the unpadded packing and gives every bucket-mate the
+    SAME array shapes — which is exactly what lets ``jax.vmap`` stack the
+    Pallas backend.
+  * ``DeviceShards`` — per-device rectangular slices of a mode layout
+    (nnz padded to a common per-device cap) with *global* relabeled rows,
+    so every device computes a partial MTTKRP into the full (I_d, R)
+    output and a single ``psum`` combines them under ``shard_map``.
+
+The tiling decisions themselves stay in the cost model
+(`kernels.ops.estimate_pack_cost` / ``auto_tiles`` / ``auto_rank_block``);
+this module is the single front door that consults it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from ..kernels import ops as kops
+from .load_balance import Scheme
+
+# Per-device nnz shards are padded up to a multiple of this, so tensors of
+# similar size reuse the same distributed executable.
+DEVICE_SHARD_QUANTUM = 64
+
+
+# ---------------------------------------------------------------------------
+# nnz quantization (the bucket <-> packing contract)
+# ---------------------------------------------------------------------------
+
+
+def quantize_nnz(nnz: int, *, mode: str = "quantum", quantum: int = 128,
+                 growth: float = 1.25, min_cap: int = 128) -> int:
+    """Round ``nnz`` up to its bucket cap.  This is THE quantization rule:
+    ``serve.buckets.BucketPolicy`` calls it for padding policy and
+    ``plan_bucket`` consumes its output for slab caps, so the two can
+    never disagree.
+
+    mode 'quantum': next multiple of ``quantum`` (linear executable count,
+    worst-case padding quantum/cap).  mode 'geometric': next
+    ``min_cap * growth^k`` (bounded executable count for arbitrary
+    spreads, up to (1 - 1/growth) padding).
+    """
+    nnz = max(int(nnz), 1)
+    if mode == "quantum":
+        q = max(int(quantum), 1)
+        return max(-(-nnz // q) * q, min_cap)
+    if mode == "geometric":
+        cap = float(min_cap)
+        while cap < nnz:
+            cap *= growth
+        return int(np.ceil(cap))
+    raise ValueError(f"unknown bucketing mode {mode!r}")
+
+
+def slab_cap(num_rows: int, nnz_cap: int, block_rows: int, tile: int) -> int:
+    """Static upper bound on the packed grid size G for ANY tensor of this
+    mode with ``nnz <= nnz_cap``:  every row block contributes at least one
+    slab (``ceil(I_d / block_rows)`` total) and the data itself at most
+    ``floor(nnz_cap / tile)`` extra full slabs, since
+    ``ceil(x / t) <= 1 + floor(x / t)``.  Packing padded to this cap makes
+    the slab arrays' shapes a pure function of the bucket class."""
+    nb = max(1, -(-int(num_rows) // int(block_rows)))
+    return nb + int(nnz_cap) // int(tile)
+
+
+# ---------------------------------------------------------------------------
+# Per-mode plans (the cost model's single front door)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModePlan:
+    """Static packing/tiling decision for one output mode of a bucket class.
+
+    Every field is a pure function of (shape, nnz_cap, rank, kappa) — no
+    tensor data — so all bucket-mates share it, and it doubles as an
+    executable-cache key component."""
+
+    mode: int
+    num_rows: int
+    block_rows: int
+    tile: int
+    rank_block: int            # columns resident per kernel pass
+    num_row_blocks: int
+    slab_cap: int              # padded grid size G_cap (static)
+    nnz_cap: int
+
+    @property
+    def pallas_meta(self) -> tuple[int, int, int, int]:
+        """The static tuple the fused sweep builder keys its cache on."""
+        return (self.num_row_blocks, self.block_rows, self.tile,
+                self.rank_block)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """All-modes static plan for one (shape, nnz_cap) class.
+
+    Built once per bucket class (``plan_bucket``, cached) or once per
+    tensor (``plan_tensor``); consumed by kernel packing, the vmapped
+    batched engine, and the distributed shard builder."""
+
+    shape: tuple[int, ...]
+    nnz_cap: int
+    rank: int
+    kappa: int
+    modes: tuple[ModePlan, ...]
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    def pallas_meta(self) -> tuple:
+        return tuple(m.pallas_meta for m in self.modes)
+
+    def describe(self) -> str:
+        """One-line plan fingerprint for benchmark attribution."""
+        parts = []
+        for m in self.modes:
+            parts.append(f"m{m.mode}:br{m.block_rows}/t{m.tile}"
+                         f"/rb{m.rank_block}/G{m.slab_cap}")
+        return ";".join(parts)
+
+
+class _UniformModeStats:
+    """Duck-typed stand-in for a ``ModeLayout`` in the cost model when no
+    tensor data exists yet (bucket-level planning): ``nnz_cap`` nonzeros
+    spread uniformly over the mode's rows.  Exposes exactly the attributes
+    ``kernels.ops.estimate_pack_cost`` consumes."""
+
+    def __init__(self, shape: tuple[int, ...], mode: int, nnz: int):
+        self.shape = tuple(int(s) for s in shape)
+        self.mode = int(mode)
+        self.num_rows = self.shape[mode]
+        self.nnz = int(nnz)
+        self.nmodes = len(self.shape)
+        self.row_ptr = np.round(
+            np.linspace(0.0, self.nnz, self.num_rows + 1)
+        ).astype(np.int64)
+
+    def input_modes(self):
+        return [w for w in range(self.nmodes) if w != self.mode]
+
+
+def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
+               *, block_rows: int | None, tile: int | None) -> ModePlan:
+    if block_rows is None or tile is None:
+        br, t = kops.auto_tiles(stats, rank=rank, factor_rows=factor_rows)
+        block_rows = block_rows if block_rows is not None else br
+        tile = tile if tile is not None else t
+    num_inputs = len(stats.input_modes())
+    rblk = kops.auto_rank_block(rank, block_rows, tile, factor_rows,
+                                num_inputs) or rank
+    nb = max(1, -(-stats.num_rows // block_rows))
+    return ModePlan(
+        mode=mode,
+        num_rows=stats.num_rows,
+        block_rows=block_rows,
+        tile=tile,
+        rank_block=int(rblk),
+        num_row_blocks=nb,
+        slab_cap=slab_cap(stats.num_rows, nnz_cap, block_rows, tile),
+        nnz_cap=int(nnz_cap),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def plan_bucket(shape: tuple[int, ...], nnz_cap: int, rank: int,
+                kappa: int = 1, *, block_rows: int | None = None,
+                tile: int | None = None) -> PartitionPlan:
+    """Static plan for a (shape, nnz_cap) bucket class — NO tensor data.
+
+    The cost model prices each candidate tiling against a uniform nnz
+    distribution (the only data-independent assumption available at
+    bucket-planning time); the resulting caps are valid for every member
+    by construction (``slab_cap`` bounds any distribution).  Cached: all
+    batches of a warm bucket class share one plan object."""
+    shape = tuple(int(s) for s in shape)
+    modes = []
+    for d in range(len(shape)):
+        stats = _UniformModeStats(shape, d, nnz_cap)
+        factor_rows = sum(shape[w] for w in stats.input_modes())
+        modes.append(_mode_plan(stats, d, rank, factor_rows, nnz_cap,
+                                block_rows=block_rows, tile=tile))
+    return PartitionPlan(shape=shape, nnz_cap=int(nnz_cap), rank=int(rank),
+                         kappa=int(kappa), modes=tuple(modes))
+
+
+def plan_layout(layout, rank: int, *, nnz_cap: int | None = None,
+                block_rows: int | None = None,
+                tile: int | None = None) -> ModePlan:
+    """Plan one mode from a REAL layout (exact row distribution in the
+    cost model).  Used by the sequential path; ``nnz_cap`` defaults to the
+    layout's own nnz, i.e. no slab padding beyond the packing minimum."""
+    factor_rows = sum(layout.shape[w] for w in layout.input_modes())
+    cap = layout.nnz if nnz_cap is None else int(nnz_cap)
+    return _mode_plan(layout, layout.mode, rank, factor_rows, cap,
+                      block_rows=block_rows, tile=tile)
+
+
+def plan_tensor(tensor, rank: int, kappa: int = 1, *,
+                nnz_cap: int | None = None) -> PartitionPlan:
+    """Per-tensor plan (bucket of one): quantizes nnz through the same
+    ``quantize_nnz`` rule so a lone tensor and its bucket class agree."""
+    cap = quantize_nnz(tensor.nnz) if nnz_cap is None else int(nnz_cap)
+    return plan_bucket(tuple(int(s) for s in tensor.shape), cap, rank, kappa)
+
+
+# ---------------------------------------------------------------------------
+# Per-device shards (the shard_map path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceShards:
+    """Rectangular per-device arrays for one mode (leading dim = kappa).
+
+    Rows are GLOBAL relabeled rows: every device produces a partial
+    (I_d, R) output and ``psum`` combines them — scheme 1's partials have
+    disjoint row support (the psum reduces to a concatenation, though it
+    still pays full-array collective bandwidth — see the distributed
+    module docstring), scheme 2's overlap (the analogue of the paper's
+    global atomics).  Padding entries carry value 0 on row ``I_d - 1`` so
+    each shard's rows stay sorted."""
+
+    scheme: Scheme
+    mode: int
+    num_rows: int              # I_d
+    nnz_per_dev: int           # padded nnz per device (static)
+    idx: np.ndarray            # (kappa, nnz_per_dev, W) int32
+    rows: np.ndarray           # (kappa, nnz_per_dev) int32 global relabeled
+    vals: np.ndarray           # (kappa, nnz_per_dev) f32 (0 on padding)
+    row_perm: np.ndarray       # (kappa, I_d) int32 (replicated copies)
+    input_modes: tuple[int, ...]
+
+
+def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM
+                        ) -> DeviceShards:
+    """Slice a mode layout into kappa rectangular device shards.
+
+    The per-device nnz cap is the max partition load rounded up to
+    ``quantum`` — a static shape, so same-class tensors reuse the same
+    shard_map executable."""
+    kappa = layout.kappa
+    in_modes = layout.input_modes()
+    off = layout.part_offsets
+    max_nnz = int(np.diff(off).max()) if layout.nnz else 1
+    cap = max(-(-max(max_nnz, 1) // quantum) * quantum, quantum)
+    W = len(in_modes)
+    idx = np.zeros((kappa, cap, W), np.int32)
+    vals = np.zeros((kappa, cap), np.float32)
+    # Padding rows sit at I_d - 1 (>= every real row in the slice), keeping
+    # each shard sorted so the segmented reduction's sortedness hint holds.
+    rows = np.full((kappa, cap), layout.num_rows - 1, np.int32)
+    for p in range(kappa):
+        s, e = int(off[p]), int(off[p + 1])
+        n = e - s
+        idx[p, :n] = layout.indices[s:e][:, in_modes]
+        vals[p, :n] = layout.values[s:e]
+        rows[p, :n] = layout.rows[s:e]
+    row_perm = np.broadcast_to(
+        layout.row_perm, (kappa,) + layout.row_perm.shape).copy()
+    return DeviceShards(
+        scheme=layout.scheme,
+        mode=layout.mode,
+        num_rows=layout.num_rows,
+        nnz_per_dev=cap,
+        idx=idx,
+        rows=rows,
+        vals=vals,
+        row_perm=row_perm,
+        input_modes=tuple(in_modes),
+    )
+
+
+def shard_fit_data(tensor, kappa: int, *,
+                   quantum: int = DEVICE_SHARD_QUANTUM):
+    """Split the canonical COO across devices for the on-device sparse fit
+    (inner product psums; zero padding contributes +0.0 exactly)."""
+    nnz = tensor.nnz
+    per = max(-(-max(-(-nnz // kappa), 1) // quantum) * quantum, quantum)
+    idx = np.zeros((kappa, per, tensor.nmodes), np.int32)
+    vals = np.zeros((kappa, per), np.float32)
+    flat_v = tensor.values.astype(np.float32)
+    for p in range(kappa):
+        s = p * per
+        e = min(nnz, s + per)
+        if e > s:
+            idx[p, : e - s] = tensor.indices[s:e]
+            vals[p, : e - s] = flat_v[s:e]
+    norm_sq = np.broadcast_to(
+        np.float32(tensor.norm() ** 2), (kappa,)).copy()
+    return idx, vals, norm_sq

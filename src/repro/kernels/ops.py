@@ -41,10 +41,20 @@ class PackedModeLayout:
     lrows_packed: np.ndarray   # (1, G*T) int32
     input_modes: tuple[int, ...]
     pad_fraction: float        # padding overhead (diagnostic)
+    num_real_slabs: int = -1   # slabs before cap padding (-1: no padding)
 
     @property
     def num_slabs(self) -> int:
         return int(self.rb_of.shape[0])
+
+    @property
+    def bucket_key(self) -> tuple:
+        """Static identity of this packing's shapes: every packed layout
+        with the same key has identical array shapes, so bucket-mates
+        stack along a new leading axis (the vmapped Pallas path)."""
+        return (self.mode, self.num_rows, self.num_row_blocks,
+                self.block_rows, self.tile, self.num_slabs,
+                self.input_modes)
 
 
 def pack_slabs(
@@ -57,12 +67,20 @@ def pack_slabs(
     input_modes: Sequence[int] = (),
     block_rows: int = DEFAULT_BLOCK_ROWS,
     tile: int = DEFAULT_TILE,
+    num_slabs_cap: int | None = None,
 ) -> PackedModeLayout:
     """Pack row-sorted COO data into per-row-block slabs of ``tile`` nonzeros.
 
     Every row block gets >= 1 slab (empty blocks get one all-padding slab so
     their output block is zero-initialized).  Padding entries carry value 0
     and indices 0, contributing nothing.
+
+    ``num_slabs_cap`` (from ``core.plan.slab_cap``) pads the grid with
+    appended all-zero slabs on the LAST row block, making the packed array
+    shapes a pure function of the plan rather than the data: bucket-mates
+    stack for ``jax.vmap``.  The padding is bit-exact — the real slabs are
+    untouched (appending cannot shift slab boundaries) and each extra slab
+    contributes ``+= 0.0`` to an already-initialized output block.
     """
     nnz = len(values)
     if nnz and not bool(np.all(rows[:-1] <= rows[1:])):
@@ -100,6 +118,28 @@ def pack_slabs(
         idx_p = np.zeros((G, tile, W), np.int32)
         lrow_p = np.zeros((G, tile), np.int32)
 
+    G_real = G
+    if num_slabs_cap is not None:
+        if G > num_slabs_cap:
+            raise ValueError(
+                f"packing needs {G} slabs but the plan caps at "
+                f"{num_slabs_cap}; nnz exceeds the plan's nnz_cap")
+        extra = num_slabs_cap - G
+        if extra:
+            # Appended zero slabs revisit the last row block: first=0 (no
+            # re-init), values 0, local row 0 — an exact += 0.0.
+            slab_block = np.concatenate(
+                [slab_block, np.full(extra, nb - 1, dtype=np.int64)])
+            rank = np.concatenate(
+                [rank, np.ones(extra, dtype=np.int64)])   # never first
+            vals_p = np.concatenate(
+                [vals_p, np.zeros((extra, tile), np.float32)])
+            idx_p = np.concatenate(
+                [idx_p, np.zeros((extra, tile, W), np.int32)])
+            lrow_p = np.concatenate(
+                [lrow_p, np.zeros((extra, tile), np.int32)])
+            G = num_slabs_cap
+
     pad = 1.0 - (nnz / float(G * tile)) if G else 0.0
     return PackedModeLayout(
         mode=mode,
@@ -116,11 +156,18 @@ def pack_slabs(
         lrows_packed=lrow_p.reshape(1, G * tile).astype(np.int32),
         input_modes=tuple(input_modes) or tuple(range(W)),
         pad_fraction=float(pad),
+        num_real_slabs=G_real,
     )
 
 
-def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS, tile: int = DEFAULT_TILE) -> PackedModeLayout:
-    """Pack a ``core.layout.ModeLayout`` for kernel execution."""
+def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS,
+                tile: int = DEFAULT_TILE,
+                num_slabs_cap: int | None = None) -> PackedModeLayout:
+    """Pack a ``core.layout.ModeLayout`` for kernel execution.
+
+    With ``num_slabs_cap`` (see ``core.plan``) the packing is padded to the
+    plan's static grid size — bucket-keyed: every layout of the same
+    (shape, nnz-bucket) class yields identically-shaped arrays."""
     in_modes = layout.input_modes()
     return pack_slabs(
         layout.indices[:, in_modes],
@@ -131,10 +178,17 @@ def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS, tile: int = DEF
         input_modes=in_modes,
         block_rows=block_rows,
         tile=tile,
+        num_slabs_cap=num_slabs_cap,
     )
 
 
 # -- beyond-paper: BlockSpec auto-tuning -------------------------------------
+#
+# The cost model below is consumed through ``core.plan`` (the single
+# planning layer): ``plan_bucket`` prices candidate tilings against a
+# uniform-distribution stand-in, ``plan_layout`` against the real layout.
+# ``estimate_pack_cost``/``auto_tiles`` accept either — they only read
+# ``num_rows`` / ``nnz`` / ``nmodes`` / ``row_ptr``.
 
 _MXU_DIM = 128
 _VMEM_BYTES = 16 * 2**20

@@ -88,11 +88,13 @@ class ALSRunner:
                  max_wait_s: float = 0.005, policy=None):
         if mode is None:
             # Default to the batched service where it supports the
-            # configuration; engine="host" and backend="pallas" (whose
-            # packed slabs don't stack) keep working via the sequential
-            # path instead of failing construction.
+            # configuration (all three fused backends, pallas included
+            # now that core.plan slab caps make its packings stack);
+            # engine="host" keeps working via the sequential path
+            # instead of failing construction.
             mode = ("batched" if engine == "fused"
-                    and backend in ("segment", "coo") else "sequential")
+                    and backend in ("segment", "coo", "pallas")
+                    else "sequential")
         if mode not in ("batched", "sequential"):
             raise ValueError(f"unknown mode {mode!r}")
         if mode == "batched" and engine != "fused":

@@ -25,10 +25,13 @@ mirroring the sequential engine's window structure):
 
 Backends: ``segment`` (default; per-tensor mode layouts are stacked —
 same padded nnz ⇒ identical array shapes regardless of which
-load-balancing scheme each tensor picked) and ``coo`` (no host-side
-layout preprocessing at all).  ``pallas`` is not batchable yet: its
-packed slab shapes are data-dependent, so bucket-mates do not stack —
-see the ROADMAP follow-up.
+load-balancing scheme each tensor picked), ``coo`` (no host-side layout
+preprocessing at all), and ``pallas``: each bucket-mate's layout is
+packed to the bucket's static ``core.plan`` slab cap, so the slab arrays
+share one shape and the kernel vmaps (interpret mode on CPU).  The
+pallas path packs the UNPADDED tensors (slab-cap padding replaces nnz
+padding), which keeps the batched result bit-identical to the
+per-request sequential pallas engine under the same plan.
 """
 from __future__ import annotations
 
@@ -43,49 +46,85 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..core import als_device
+from ..core import plan as plan_mod
 from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
 from ..core.layout import build_all_mode_layouts
+from ..kernels import ops as kops
 from .buckets import pad_tensor
 
-_BATCH_BACKENDS = ("segment", "coo")
+_BATCH_BACKENDS = ("segment", "coo", "pallas")
+
+
+def _all_finite(tree) -> jnp.ndarray:
+    """Scalar bool: every float leaf of ``tree`` is finite."""
+    leaves = [l for l in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    ok = jnp.bool_(True)
+    for l in leaves:
+        ok = ok & jnp.all(jnp.isfinite(l))
+    return ok
 
 
 @functools.lru_cache(maxsize=None)
 def _build_batched_block(backend: str, nmodes: int, rank: int,
                          shapes: tuple[int, ...], nnz_cap: int, batch: int,
                          interpret: bool, donate: bool, solver: str,
-                         block: int):
+                         block: int, pallas_meta: tuple | None = None):
     """Jitted ``lax.scan`` of ``block`` vmapped sweeps with per-tensor
     convergence masking.  ``nnz_cap`` and ``batch`` are part of the key so
     the cache honestly counts one executable per (bucket, B) class.
 
+    The pinv fallback is HOISTED to a batch-level ``lax.cond``: the
+    window first scans a fallback-free sweep (under vmap a per-element
+    ``lax.cond`` lowers to a select that always pays the small-R SVD);
+    only if any float in the result is non-finite does the window re-run
+    with the guarded sweep.  Well-conditioned batches — the overwhelming
+    majority — never touch the SVD.
+
     carry = (state, active (B,) bool, last_fit (B,), done (B,) int32);
     returns (carry, fits (block, B))."""
-    sweep = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
-                                      None, interpret, solver)
-    vsweep = jax.vmap(sweep, in_axes=(0, 0, 0))
+    sweep_fast = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
+                                           pallas_meta, interpret, solver,
+                                           fallback="none")
+    sweep_safe = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
+                                           pallas_meta, interpret, solver,
+                                           fallback="cond")
+    vfast = jax.vmap(sweep_fast, in_axes=(0, 0, 0))
+    vsafe = jax.vmap(sweep_safe, in_axes=(0, 0, 0))
 
     def run_block(carry, mode_data_all, fit_data, tol_b, max_iters_b):
         fit_ref = carry[2]       # fit at the previous window boundary
 
-        def body(c, _):
-            state, active, last_fit, done = c
-            new_state, fit = vsweep(state, mode_data_all, fit_data)
+        def make_body(vsweep):
+            def body(c, _):
+                state, active, last_fit, done = c
+                new_state, fit = vsweep(state, mode_data_all, fit_data)
 
-            def freeze(new, old):
-                mask = active.reshape(
-                    (active.shape[0],) + (1,) * (new.ndim - 1))
-                return jnp.where(mask, new, old)
+                def freeze(new, old):
+                    mask = active.reshape(
+                        (active.shape[0],) + (1,) * (new.ndim - 1))
+                    return jnp.where(mask, new, old)
 
-            state = jax.tree_util.tree_map(freeze, new_state, state)
-            fit = jnp.where(active, fit, last_fit)
-            done = done + active.astype(jnp.int32)
-            active = active & (done < max_iters_b)
-            return (state, active, fit, done), fit
+                state = jax.tree_util.tree_map(freeze, new_state, state)
+                fit = jnp.where(active, fit, last_fit)
+                done = done + active.astype(jnp.int32)
+                active = active & (done < max_iters_b)
+                return (state, active, fit, done), fit
+            return body
 
-        (state, active, fit, done), fits = lax.scan(body, carry, xs=None,
-                                                    length=block)
+        fast_carry, fast_fits = lax.scan(make_body(vfast), carry, xs=None,
+                                         length=block)
+        # Batch-level all-finite gate: carry[2] (the -inf initial boundary
+        # fit) is deliberately excluded — only the NEW state and fits
+        # decide whether the guarded re-run is needed.
+        ok = _all_finite((fast_carry[0], fast_fits))
+
+        def rerun_safe(_):
+            return lax.scan(make_body(vsafe), carry, xs=None, length=block)
+
+        (state, active, fit, done), fits = lax.cond(
+            ok, lambda _: (fast_carry, fast_fits), rerun_safe, None)
         # Convergence is judged at the WINDOW boundary against the previous
         # boundary's fit — the same rule (and therefore the same stopping
         # iteration) as the sequential fused engine, just vectorized.
@@ -113,8 +152,7 @@ class BatchedEngine:
         if backend not in _BATCH_BACKENDS:
             raise ValueError(
                 f"batched engine supports {_BATCH_BACKENDS}, got "
-                f"{backend!r} (pallas slab shapes are data-dependent and "
-                f"do not stack)")
+                f"{backend!r}")
         self.rank = rank
         self.kappa = kappa
         self.backend = backend
@@ -123,16 +161,24 @@ class BatchedEngine:
         if donate is None:
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
-        if solver == "auto":
-            solver = "cho" if jax.default_backend() != "cpu" else "inv"
-        if solver not in ("cho", "inv"):
-            raise ValueError(f"unknown solver {solver!r}")
-        self.solver = solver
+        self.solver = als_device.resolve_solver(solver)
 
     # -- data staging -------------------------------------------------------
 
-    def _stack_batch(self, padded: list[SparseTensor]):
-        """Stacked per-mode device arrays + fit data for the vmapped sweep."""
+    def bucket_plan(self, shape: tuple[int, ...],
+                    nnz_cap: int) -> plan_mod.PartitionPlan:
+        """The static plan a (shape, nnz_cap) bucket executes under —
+        shared with the sequential path for bit-identical results."""
+        return plan_mod.plan_bucket(tuple(int(s) for s in shape),
+                                    int(nnz_cap), self.rank, self.kappa)
+
+    def _stack_batch(self, tensors: list[SparseTensor],
+                     padded: list[SparseTensor], nnz_cap: int):
+        """Stacked per-mode device arrays + fit data for the vmapped sweep.
+
+        Returns ``(mode_data_all, fit_data, pallas_meta)``; the meta tuple
+        is ``None`` except for the pallas backend, where it carries the
+        bucket plan's static tiling (part of the executable key)."""
         N = padded[0].nmodes
         idx = jnp.asarray(np.stack([t.indices for t in padded]))
         vals = jnp.asarray(np.stack(
@@ -142,23 +188,56 @@ class BatchedEngine:
         fit_data = (idx, vals, norms)
         if self.backend == "coo":
             coo = (idx, vals)
-            return tuple(coo for _ in range(N)), fit_data
+            return tuple(coo for _ in range(N)), fit_data, None
+        if self.backend == "pallas":
+            # Pack each UNPADDED tensor to the bucket plan's static slab
+            # cap: slab-cap padding (appended zero slabs) replaces nnz
+            # padding, so the packed arrays both stack across bucket-mates
+            # AND stay bit-identical to the tensor's own sequential
+            # packing under the same plan.
+            bplan = self.bucket_plan(tuple(padded[0].shape), nnz_cap)
+            per_mode: list[list[tuple]] = [[] for _ in range(N)]
+            keys: list[tuple | None] = [None] * N
+            for t in tensors:
+                for d, lay in enumerate(
+                        build_all_mode_layouts(t, self.kappa)):
+                    mp = bplan.modes[d]
+                    p = kops.pack_layout(lay, block_rows=mp.block_rows,
+                                         tile=mp.tile,
+                                         num_slabs_cap=mp.slab_cap)
+                    # Every bucket-mate must pack to the same static
+                    # identity or vmap stacking is silently wrong.
+                    if keys[d] is None:
+                        keys[d] = p.bucket_key
+                    elif p.bucket_key != keys[d]:
+                        raise AssertionError(
+                            f"plan produced mismatched packings for mode "
+                            f"{d}: {p.bucket_key} vs {keys[d]}")
+                    per_mode[d].append((p.rb_of, p.first, p.idx_packed,
+                                        p.vals_packed, p.lrows_packed,
+                                        lay.row_perm))
+            mode_data_all = tuple(
+                tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode[d]]))
+                      for j in range(6))
+                for d in range(N)
+            )
+            return mode_data_all, fit_data, bplan.pallas_meta()
         # segment: build each tensor's mode-specific layouts on host, then
         # stack.  Padding to a common nnz is exactly what makes the layout
         # arrays stack — every bucket-mate yields (nnz_cap, ·) per mode.
-        per_mode: list[list[tuple]] = [[] for _ in range(N)]
+        per_mode_s: list[list[tuple]] = [[] for _ in range(N)]
         for t in padded:
             for d, lay in enumerate(build_all_mode_layouts(t, self.kappa)):
                 im = lay.input_modes()
-                per_mode[d].append((lay.indices[:, im], lay.rows,
-                                    lay.values.astype(np.float32),
-                                    lay.row_perm))
+                per_mode_s[d].append((lay.indices[:, im], lay.rows,
+                                      lay.values.astype(np.float32),
+                                      lay.row_perm))
         mode_data_all = tuple(
-            tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode[d]]))
+            tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode_s[d]]))
                   for j in range(4))
             for d in range(N)
         )
-        return mode_data_all, fit_data
+        return mode_data_all, fit_data, None
 
     # -- driver -------------------------------------------------------------
 
@@ -204,7 +283,8 @@ class BatchedEngine:
         if len(seeds) != B:
             raise ValueError("seeds must match batch size")
 
-        mode_data_all, fit_data = self._stack_batch(padded)
+        mode_data_all, fit_data, pallas_meta = self._stack_batch(
+            tensors, padded, cap)
         # Host-side init, stacked once: one upload per state leaf instead
         # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
         inits = [als_device.init_state_host(shape, self.rank, int(s))
@@ -233,7 +313,7 @@ class BatchedEngine:
             k = min(self.check_every, max_iters - it)
             fn = _build_batched_block(
                 self.backend, N, self.rank, shape, cap, B,
-                self.interpret, self.donate, self.solver, k,
+                self.interpret, self.donate, self.solver, k, pallas_meta,
             )
             carry, fits_blk = fn(carry, mode_data_all, fit_data,
                                  tol_dev, max_iters_dev)

@@ -39,6 +39,7 @@ import dataclasses
 
 import numpy as np
 
+from ..core import plan as plan_mod
 from ..core.coo import SparseTensor
 
 
@@ -60,7 +61,11 @@ class Bucket:
 
 @dataclasses.dataclass(frozen=True)
 class BucketPolicy:
-    """nnz quantization rule.
+    """nnz quantization rule — a thin front over the SAME
+    ``core.plan.quantize_nnz`` the planning layer consumes, so padding
+    policy and kernel packing can never disagree about a bucket's cap
+    (the plan's static slab caps are a pure function of the cap this
+    policy emits).
 
     mode:
       'quantum'   — round nnz up to the next multiple of ``quantum``
@@ -86,17 +91,17 @@ class BucketPolicy:
         if self.quantum < 1 or self.min_cap < 1:
             raise ValueError("quantum and min_cap must be >= 1")
 
+    @classmethod
+    def for_plan(cls, tile: int = 256, **kw) -> "BucketPolicy":
+        """Policy whose quantum is the plan's slab tile: every bucket cap
+        then lands on a slab boundary, so nnz padding and slab-cap
+        padding quantize identically (zero waste between the two)."""
+        return cls(quantum=int(tile), min_cap=int(tile), **kw)
+
     def nnz_cap(self, nnz: int) -> int:
-        nnz = max(int(nnz), 1)
-        if self.mode == "quantum":
-            q = max(int(self.quantum), 1)
-            return max(-(-nnz // q) * q, self.min_cap)
-        if self.mode == "geometric":
-            cap = float(self.min_cap)
-            while cap < nnz:
-                cap *= self.growth
-            return int(np.ceil(cap))
-        raise ValueError(f"unknown bucketing mode {self.mode!r}")
+        return plan_mod.quantize_nnz(
+            nnz, mode=self.mode, quantum=self.quantum,
+            growth=self.growth, min_cap=self.min_cap)
 
     def bucket_for(self, tensor: SparseTensor) -> Bucket:
         return Bucket(tuple(int(s) for s in tensor.shape),

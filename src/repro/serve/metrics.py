@@ -31,7 +31,7 @@ class BatchEvent:
     real_nnz: int          # sum of un-padded nnz over the batch
     padded_nnz: int        # batch_size * bucket nnz_cap
     wall_s: float
-    trigger: str           # 'max_batch' | 'max_wait' | 'forced'
+    trigger: str           # 'max_batch' | 'max_wait' | 'aging' | 'forced'
     cache_hits: int        # executable-cache hit delta for this flush
     cache_misses: int
 
@@ -103,6 +103,6 @@ class ServiceMetrics:
             "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
             "flush_triggers": {
                 t: self._triggers.get(t, 0)
-                for t in ("max_batch", "max_wait", "forced")
+                for t in ("max_batch", "max_wait", "aging", "forced")
             },
         }

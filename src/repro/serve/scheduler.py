@@ -7,10 +7,18 @@ the vmapped ``BatchedEngine`` (B bucket-mates per dispatch):
   * ``submit()`` quantizes the request into its (shape, nnz-cap) bucket
     (``serve.buckets``), enqueues it, and returns a
     ``DecompositionFuture`` immediately.
-  * a bucket flushes when it accumulates ``max_batch`` requests
-    (throughput trigger), when its oldest request has waited
-    ``max_wait_s`` (latency trigger, checked by ``poll()`` and every
-    ``submit``), or when ``flush()`` / ``Future.result()`` forces it.
+  * a bucket flushes when its aging+occupancy score crosses 1.0:
+    ``score = oldest_wait / max_wait_s + queued / max_batch``.  A full
+    bucket flushes immediately (occupancy term alone reaches 1 — the
+    throughput trigger), an expired one likewise (aging term alone — the
+    latency trigger), and a partially-full bucket that has waited most of
+    its budget flushes early rather than idling the device.  Every
+    ``submit``/``poll`` re-scores ALL buckets and flushes the
+    highest-scoring ready ones first, so the device is handed to the
+    neediest bucket instead of whichever FIFO happened to expire — and
+    because the aging term grows without bound, no bucket can be starved
+    by heavier neighbors (tested).  ``flush()`` / ``Future.result()``
+    still force a flush outright.
   * flushing pads every queued tensor to the bucket cap, runs one
     batched decomposition, resolves the futures, and records the batch
     in ``ServiceMetrics``.
@@ -119,19 +127,17 @@ class BatchScheduler:
                 _Pending(tensor, fut, int(n_iters), float(tol), int(seed),
                          now))
             self.metrics.record_submit(now)
-            if len(self._queues[bucket]) >= self.max_batch:
-                work = [self._pop(bucket, "max_batch")]
-            else:
-                work = self._pop_expired()
+            work = self._pop_ready()
         self._run_batches(work)
         return fut
 
     def poll(self) -> int:
-        """Flush every bucket whose oldest request has waited past
-        ``max_wait_s``.  Returns the number of batches flushed.  Call this
-        from the serving loop between request arrivals."""
+        """Flush every bucket whose aging+occupancy score has crossed the
+        threshold, neediest first.  Returns the number of batches
+        flushed.  Call this from the serving loop between request
+        arrivals."""
         with self._lock:
-            work = self._pop_expired()
+            work = self._pop_ready()
         self._run_batches(work)
         return len(work)
 
@@ -163,13 +169,36 @@ class BatchScheduler:
         batch, self._queues[bucket] = q[: self.max_batch], q[self.max_batch:]
         return bucket, batch, trigger
 
-    def _pop_expired(self) -> list:
+    def _score(self, q: list, now: float) -> float:
+        """Aging + occupancy flush score; >= 1.0 means ready.  The aging
+        term grows without bound, so every nonempty bucket eventually
+        flushes regardless of how busy its neighbors are (starvation
+        freedom); the occupancy term lets a filling bucket claim the
+        device before its latency budget expires."""
+        age = (now - q[0].t_submit) / self.max_wait_s if self.max_wait_s \
+            else float("inf")
+        return age + len(q) / self.max_batch
+
+    def _pop_ready(self) -> list:
+        """Pop every ready bucket (score >= 1), highest score first —
+        the cross-bucket replacement for independent per-bucket FIFO
+        expiry: when the device frees up, the neediest class wins."""
         now = self.clock()
-        work = []
+        scored = []
         for b in list(self._queues.keys()):
             q = self._queues.get(b)
-            if q and now - q[0].t_submit >= self.max_wait_s:
-                work.append(self._pop(b, "max_wait"))
+            if not q:
+                continue
+            s = self._score(q, now)
+            if s >= 1.0:
+                scored.append((s, b, len(q), now - q[0].t_submit))
+        scored.sort(key=lambda e: -e[0])
+        work = []
+        for _, b, n, age in scored:
+            trigger = ("max_batch" if n >= self.max_batch
+                       else "max_wait" if age >= self.max_wait_s
+                       else "aging")
+            work.append(self._pop(b, trigger))
         return work
 
     def _run_batches(self, work: list) -> None:

@@ -3,7 +3,7 @@ per-tensor convergence masking, executable-cache reuse."""
 import numpy as np
 import pytest
 
-from repro.core import cpd_als_fused, random_sparse
+from repro.core import cpd_als_fused, make_plan, random_sparse
 from repro.serve import BatchedEngine, batched_cache_stats
 
 # Three bucket shapes (incl. a 4-mode one) for the equivalence matrix.
@@ -115,9 +115,49 @@ def test_batch_rejects_mixed_shapes():
                              random_sparse((10, 8, 7), 100, seed=1)])
 
 
-def test_pallas_backend_rejected():
-    with pytest.raises(ValueError, match="pallas"):
-        BatchedEngine(rank=3, backend="pallas")
+def test_batched_pallas_matches_sequential_fused():
+    """The Pallas backend now stacks (core.plan slab caps): one vmapped
+    dispatch over B tensors matches B sequential fused pallas runs under
+    the SAME partition plan to fp32 tolerance."""
+    shape, nnz, R = (18, 13, 9), 500, 3
+    ts = _stream(shape, nnz)
+    eng = BatchedEngine(rank=R, kappa=2, backend="pallas", check_every=2)
+    cap = nnz
+    batch = eng.decompose_batch(ts, n_iters=4, tol=-1.0,
+                                seeds=[10, 11, 12], nnz_cap=cap)
+    bplan = eng.bucket_plan(shape, cap)
+    for i, t in enumerate(ts):
+        mplan = make_plan(t, 2, partition=bplan)
+        ref = cpd_als_fused(t, R, plan=mplan, kappa=2, n_iters=4, tol=-1.0,
+                            seed=10 + i, backend="pallas", check_every=2)
+        assert batch[i].iters == ref.iters
+        np.testing.assert_allclose(batch[i].fits, ref.fits,
+                                   rtol=1e-5, atol=1e-5)
+        for Fb, Fr in zip(batch[i].factors, ref.factors):
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-4, atol=1e-4)
+
+
+def test_batched_pallas_bit_identical_to_per_request():
+    """Co-batching must never alter an individual pallas result: a B=3
+    batch returns BIT-identical factors and weights to serving each
+    request alone (B=1) through the same engine.  (The plain non-vmapped
+    engine agrees only to fp32 tolerance — XLA lowers the R x R solve
+    differently under batching — but batching itself is exact.)  The
+    diagnostic fit scalar may drift in the last ulp between the two
+    executables (different XLA fusion of the reduction), so it gets a
+    tight tolerance rather than equality."""
+    shape, nnz, R = (18, 13, 9), 500, 3
+    ts = _stream(shape, nnz)
+    eng = BatchedEngine(rank=R, kappa=2, backend="pallas", check_every=2)
+    b3 = eng.decompose_batch(ts, n_iters=4, tol=-1.0, seeds=[10, 11, 12],
+                             nnz_cap=512)
+    for i, t in enumerate(ts):
+        b1 = eng.decompose_batch([t], n_iters=4, tol=-1.0, seeds=[10 + i],
+                                 nnz_cap=512)[0]
+        for Fa, Fb in zip(b3[i].factors, b1.factors):
+            assert np.array_equal(Fa, Fb)
+        assert np.array_equal(b3[i].weights, b1.weights)
+        np.testing.assert_allclose(b3[i].fits, b1.fits, rtol=0, atol=1e-6)
 
 
 def test_empty_batch():

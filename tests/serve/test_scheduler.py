@@ -140,14 +140,66 @@ def test_result_timeout_does_not_flush():
 
 def test_runner_falls_back_to_sequential_for_unbatchable_configs():
     """Configurations the batched engine can't serve keep working through
-    the sequential path instead of failing construction."""
+    the sequential path instead of failing construction; pallas is
+    batchable now (core.plan slab caps)."""
     from repro.runtime import ALSRunner
 
     assert ALSRunner(rank=3).mode == "batched"
-    assert ALSRunner(rank=3, backend="pallas").mode == "sequential"
+    assert ALSRunner(rank=3, backend="pallas").mode == "batched"
     assert ALSRunner(rank=3, engine="host").mode == "sequential"
     with pytest.raises(ValueError):
         ALSRunner(rank=3, engine="host", mode="batched")
+
+
+def test_cross_bucket_aging_prevents_starvation():
+    """A lone request in a quiet bucket must flush even while a busy
+    bucket keeps claiming the device with full batches: its aging score
+    grows without bound, so some later submit/poll hands it the device
+    (starvation freedom of the cross-bucket policy)."""
+    sched, clock = make_scheduler(max_batch=2, max_wait_s=10.0)
+    lone = sched.submit(tensors(SHAPE_B, 1)[0], n_iters=2, tol=-1.0)
+    rounds = 0
+    while not lone.done():
+        assert rounds < 20, "lone request starved by busy bucket"
+        for t in tensors(SHAPE_A, 2):        # busy bucket: full batches
+            sched.submit(t, n_iters=2, tol=-1.0)
+        clock.advance(1.0)
+        rounds += 1
+    # flushed by the aging term well before max_wait alone would trigger
+    # (age < 10 s when it completed), via a busy-bucket submit.
+    assert rounds <= 11
+    assert sched.metrics.snapshot()["flush_triggers"]["aging"] >= 1
+    assert lone.result().iters == 2
+
+
+def test_neediest_bucket_flushes_first():
+    """When several buckets are ready at once, the highest-scoring one
+    (oldest wait here) is executed first."""
+    order = []
+
+    class Spy:
+        rank = 3
+
+        def decompose_batch(self, ts, **kw):
+            order.append(tuple(ts[0].shape))
+            return [_fake_result(t) for t in ts]
+
+    def _fake_result(t):
+        from repro.core.cpd import CPDResult
+        return CPDResult(factors=[np.zeros((s, 3)) for s in t.shape],
+                         weights=np.ones(3), fits=[0.0], iters=1,
+                         mttkrp_seconds=0.0, total_seconds=0.0)
+
+    clock = FakeClock()
+    sched = BatchScheduler(Spy(), policy=BucketPolicy(), max_batch=8,
+                           max_wait_s=1.0, metrics=ServiceMetrics(),
+                           clock=clock)
+    sched.submit(tensors(SHAPE_A, 1)[0], n_iters=1, tol=-1.0)
+    clock.advance(0.5)
+    sched.submit(tensors(SHAPE_B, 1)[0], n_iters=1, tol=-1.0)
+    clock.advance(2.0)                       # both expired; A waited longer
+    assert sched.poll() == 2
+    assert order == [SHAPE_A, SHAPE_B]
 
 
 def test_engine_error_delivered_via_futures_not_caller():

@@ -1,0 +1,176 @@
+"""Decomposition-methods benchmark: every registered method on the shared
+substrate, sequential and through the batched service.
+
+Per method (plain cp / nncp / masked / streaming):
+
+  * sequential fused wall time per iteration and final fit on a
+    powerlaw-skewed synthetic (nonneg values for nncp; 50%-observed
+    low-rank for masked, reporting held-out reconstruction error —
+    the completion workload's actual figure of merit);
+  * a mixed-method service stream: interleaved {cp, nncp, masked}
+    requests of one shape class, batched into method-keyed buckets —
+    reported as stream wall time, batches flushed, and padding overhead
+    (the "methods layer rides the serving layer" probe);
+  * streaming: k increments of warm-started folding vs one cold batch
+    refit of the same union tensor (speedup = refit time / total
+    increment time, plus the fit gap).
+
+``--smoke`` shrinks sizes/iters for CI.  Rows carry the bucket plan
+fingerprint so perf shifts are attributable to planning changes.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core import SparseTensor, cpd_als, plan_tensor, random_sparse
+from repro.methods import StreamingCP, list_methods
+from repro.serve import DecompositionService
+
+RANK = 8
+KAPPA = 2
+
+
+def _dense_low_rank(shape, rank, seed):
+    rng = np.random.default_rng(seed)
+    factors = [rng.standard_normal((I, rank)).astype(np.float32)
+               for I in shape]
+    full = np.einsum("ir,jr,kr->ijk", *factors)
+    coords = np.indices(shape).reshape(len(shape), -1).T.astype(np.int32)
+    return coords, full.reshape(-1).astype(np.float32)
+
+
+def bench_sequential(shape, nnz, iters, rank) -> list[dict]:
+    rows = []
+    t = random_sparse(shape, nnz, seed=0, distribution="powerlaw")
+    t_pos = SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+    plan_fp = plan_tensor(t, rank, KAPPA).describe()
+    for method, tensor in (("cp", t), ("nncp", t_pos), ("masked", t)):
+        # Warm-up with the SAME check window: the scan block length is
+        # part of the executable key.
+        cpd_als(tensor, rank, kappa=KAPPA, n_iters=2, tol=-1.0,
+                check_every=2, method=method)
+        t0 = time.perf_counter()
+        res = cpd_als(tensor, rank, kappa=KAPPA, n_iters=iters, tol=-1.0,
+                      check_every=2, method=method)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"methods/{method}/sequential",
+            "method": method, "shape": shape, "nnz": tensor.nnz,
+            "s_per_iter": wall / iters, "fit": res.fits[-1],
+            "plan": plan_fp,
+        })
+    return rows
+
+
+def bench_completion(shape, rank, iters) -> dict:
+    """Masked CP on 50% observed entries of an exact low-rank tensor:
+    held-out reconstruction error is the workload's figure of merit."""
+    coords, vals = _dense_low_rank(shape, rank, seed=7)
+    rng = np.random.default_rng(8)
+    perm = rng.permutation(len(coords))
+    half = len(coords) // 2
+    obs, held = perm[:half], perm[half:]
+    t_obs = SparseTensor(coords[obs], vals[obs], shape)
+    t0 = time.perf_counter()
+    res = cpd_als(t_obs, rank, kappa=KAPPA, n_iters=iters, tol=-1.0,
+                  check_every=5, method="masked")
+    wall = time.perf_counter() - t0
+    pred = res.reconstruct_at(coords[held])
+    rel = float(np.linalg.norm(pred - vals[held])
+                / max(np.linalg.norm(vals[held]), 1e-12))
+    return {"name": "methods/masked/completion-50pct", "method": "masked",
+            "shape": shape, "observed": int(half), "wall_s": wall,
+            "fit": res.fits[-1], "heldout_rel_err": rel}
+
+
+def bench_mixed_stream(shape, nnz, n_each, iters, rank) -> dict:
+    svc = DecompositionService(rank=rank, kappa=KAPPA, max_batch=4,
+                               max_wait_s=10.0)
+    futs = []
+    t0 = time.perf_counter()
+    for i in range(n_each):
+        t = random_sparse(shape, nnz - 11 * i, seed=i,
+                          distribution="powerlaw")
+        t_pos = SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+        futs.append(svc.submit(t, n_iters=iters, tol=-1.0, seed=i))
+        futs.append(svc.submit(t_pos, n_iters=iters, tol=-1.0, seed=i,
+                               method="nncp"))
+        futs.append(svc.submit(t, n_iters=iters, tol=-1.0, seed=i,
+                               method="masked"))
+    svc.drain()
+    for f in futs:
+        f.result()
+    wall = time.perf_counter() - t0
+    snap = svc.snapshot()
+    return {"name": "methods/mixed-stream", "requests": len(futs),
+            "wall_s": wall, "batches": snap["batches"],
+            "padding_overhead": snap["padding_overhead"],
+            "cache_hit_rate": snap["cache_hit_rate"],
+            "density_tracked_buckets": snap["density_tracked_buckets"]}
+
+
+def bench_streaming(shape, rank, chunks, refine_iters, cold_iters) -> dict:
+    coords, vals = _dense_low_rank(shape, rank, seed=5)
+    rng = np.random.default_rng(6)
+    parts = np.array_split(rng.permutation(len(coords)), chunks)
+    t_full = SparseTensor(coords, vals, shape)
+
+    s = StreamingCP(rank, refine_iters=refine_iters, check_every=4)
+    s.start(SparseTensor(coords[parts[0]], vals[parts[0]], shape),
+            n_iters=cold_iters, tol=-1.0, seed=2)
+    t0 = time.perf_counter()
+    for p in parts[1:]:
+        s.update(SparseTensor(coords[p], vals[p], shape))
+    inc_wall = time.perf_counter() - t0
+
+    # Warm-up with the SAME check window (block length is part of the
+    # executable key): n_iters=6 @ check_every=4 compiles both the
+    # window-4 block and the remainder window-2 block the timed refit uses.
+    cpd_als(t_full, rank, kappa=1, n_iters=6, tol=-1.0, seed=2,
+            check_every=4)
+    t0 = time.perf_counter()
+    ref = cpd_als(t_full, rank, kappa=1, n_iters=cold_iters, tol=-1.0,
+                  seed=2, check_every=4)
+    refit_wall = time.perf_counter() - t0
+    return {"name": "methods/streaming", "increments": chunks - 1,
+            "refine_iters": refine_iters,
+            "increment_wall_s": inc_wall, "refit_wall_s": refit_wall,
+            "speedup_vs_refit": refit_wall / max(inc_wall, 1e-12),
+            "stream_fit": s.fit, "refit_fit": ref.fits[-1]}
+
+
+def run(smoke: bool = False) -> list[dict]:
+    if smoke:
+        shape, nnz, iters, n_each = (18, 13, 9), 350, 4, 2
+        cshape, citers = (10, 8, 6), 30
+        chunks, refine, cold = 3, 4, 16
+    else:
+        shape, nnz, iters, n_each = (64, 48, 32), 4000, 8, 4
+        cshape, citers = (14, 12, 10), 60
+        chunks, refine, cold = 4, 6, 30
+    rows = bench_sequential(shape, nnz, iters, RANK)
+    rows.append(bench_completion(cshape, 3, citers))
+    rows.append(bench_mixed_stream(shape, nnz, n_each, iters, RANK))
+    rows.append(bench_streaming(cshape, 3, chunks, refine, cold))
+    return rows
+
+
+def main(argv: list[str] | None = None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    rows = run(smoke=smoke)
+    print("name,us_per_call,derived")
+    print(f"methods/registered,0,{';'.join(list_methods())}")
+    for r in rows:
+        us = r.get("s_per_iter", r.get("wall_s", 0.0)) * 1e6
+        derived = ";".join(f"{k}={v}" for k, v in r.items()
+                           if k not in ("name", "shape"))
+        print(f"{r['name']},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

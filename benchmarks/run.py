@@ -1,62 +1,132 @@
-"""Benchmark runner: one section per paper table/figure + kernel + roofline.
+"""Benchmark runner: one section per paper table/figure + kernel + roofline
++ the system layers (ALS engines, serving, distributed, methods).
 
-``PYTHONPATH=src python -m benchmarks.run``            — everything
-``PYTHONPATH=src python -m benchmarks.run fig3 fig5``  — a subset
-Output: ``name,us_per_call,derived`` CSV per section.
+``PYTHONPATH=src python -m benchmarks.run``               — everything
+``PYTHONPATH=src python -m benchmarks.run fig3 fig5``     — a subset
+``PYTHONPATH=src python -m benchmarks.run methods --smoke`` — CI-sized
+
+Output: ``name,us_per_call,derived`` CSV per section, plus one
+machine-readable ``results/BENCH_<name>.json`` per section run —
+{config, rows (with plan fingerprints where the section reports them),
+wall time, timestamp} — so the perf trajectory is trackable across PRs
+instead of living in scrollback.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "results"
+
+
+def emit_json(name: str, wall_s: float, rows, config: dict) -> pathlib.Path:
+    """Write one section's machine-readable result file.  ``rows`` is the
+    section's structured output (list of dicts) when it provides one,
+    else None — wall time and config are always recorded."""
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"BENCH_{name}.json"
+
+    def _clean(obj):
+        if isinstance(obj, dict):
+            return {str(k): _clean(v) for k, v in obj.items()}
+        if isinstance(obj, (list, tuple)):
+            return [_clean(v) for v in obj]
+        if hasattr(obj, "item"):          # numpy scalars
+            return obj.item()
+        if isinstance(obj, (str, int, float, bool)) or obj is None:
+            return obj
+        return repr(obj)
+
+    path.write_text(json.dumps(_clean({
+        "name": name,
+        "config": config,
+        "wall_s": wall_s,
+        "rows": rows,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+    }), indent=2) + "\n")
+    return path
+
+
+_SECTIONS = ("table3", "fig3", "fig4", "fig5", "kernel", "als", "serve",
+             "methods", "dist", "roofline")
+_FLAGS = ("--smoke",)
+
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    argv = sys.argv[1:]
+    flags = {a for a in argv if a.startswith("--")}
+    want = {a for a in argv if not a.startswith("--")}
+    # A typo must fail loudly, not select zero sections and exit 0 green.
+    unknown = sorted((want - set(_SECTIONS)) | (flags - set(_FLAGS)))
+    if unknown:
+        sys.exit(f"unknown section/flag {unknown}; sections: "
+                 f"{', '.join(_SECTIONS)}; flags: {', '.join(_FLAGS)}")
+    smoke = "--smoke" in flags
 
     def on(name):
         return not want or name in want
 
+    # (name, title, fn) — fn returns structured rows or None.
     sections = []
     if on("table3"):
         from . import table3_datasets
-        sections.append(("table3 (dataset characteristics)", table3_datasets.main))
+        sections.append(("table3", "table3 (dataset characteristics)",
+                         table3_datasets.main))
     if on("fig3"):
         from . import fig3_total_time
-        sections.append(("fig3 (total execution time vs baselines)", fig3_total_time.main))
+        sections.append(("fig3", "fig3 (total execution time vs baselines)",
+                         fig3_total_time.main))
     if on("fig4"):
         from . import fig4_load_balance
-        sections.append(("fig4 (adaptive load balancing ablation)", fig4_load_balance.main))
+        sections.append(("fig4", "fig4 (adaptive load balancing ablation)",
+                         fig4_load_balance.main))
     if on("fig5"):
         from . import fig5_memory
-        sections.append(("fig5 (memory consumption)", fig5_memory.main))
+        sections.append(("fig5", "fig5 (memory consumption)",
+                         fig5_memory.main))
     if on("kernel"):
         from . import kernel_bench
-        sections.append(("pallas kernel micro-bench", kernel_bench.main))
+        sections.append(("kernel", "pallas kernel micro-bench",
+                         kernel_bench.main))
     if on("als"):
         from . import als_bench
-        sections.append(("ALS engine (fused device-resident vs host loop)", als_bench.main))
+        sections.append(("als", "ALS engine (fused device-resident vs "
+                         "host loop)", als_bench.main))
     if on("serve"):
         from . import serve_bench
         # own argv: the runner's section args must not leak into
         # serve_bench's argparse, and its timing-dependent acceptance
         # assertions must not abort the remaining sections
-        sections.append(("serving (batched service vs sequential runner)",
-                         lambda: serve_bench.main(["--no-check"])))
+        serve_args = ["--no-check"] + (["--smoke"] if smoke else [])
+        sections.append(("serve", "serving (batched service vs sequential "
+                         "runner)", lambda: serve_bench.main(serve_args)))
+    if on("methods"):
+        from . import methods_bench
+        sections.append(("methods", "decomposition methods (nncp / masked "
+                         "/ streaming / mixed-method service)",
+                         lambda: methods_bench.main(
+                             ["--smoke"] if smoke else [])))
     if on("dist"):
         from . import dist_bench
         # subprocess with forced host devices: jax pins its device count
         # at first init, so the 8-device mesh cannot share this process
-        sections.append(("distributed ALS smoke (shard_map, 8 virtual devices)",
-                         dist_bench.main))
+        sections.append(("dist", "distributed ALS smoke (shard_map, 8 "
+                         "virtual devices)", dist_bench.main))
     if on("roofline"):
         from . import roofline
-        sections.append(("roofline table (from dry-run)", roofline.main))
+        sections.append(("roofline", "roofline table (from dry-run)",
+                         roofline.main))
 
-    for title, fn in sections:
+    for name, title, fn in sections:
         print(f"\n===== {title} =====")
         t0 = time.time()
-        fn()
-        print(f"===== done in {time.time()-t0:.1f}s =====")
+        rows = fn()
+        wall = time.time() - t0
+        path = emit_json(name, wall, rows if isinstance(rows, list) else None,
+                         {"argv": argv, "smoke": smoke})
+        print(f"===== done in {wall:.1f}s -> {path.relative_to(path.parents[1])} =====")
 
 
 if __name__ == "__main__":

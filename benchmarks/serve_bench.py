@@ -182,6 +182,7 @@ def main(argv=None):
         assert gmean >= 2.0, f"batched speedup {gmean:.2f}x < 2x"
         assert best >= 2.0, f"best stream speedup {best:.2f}x < 2x"
         assert worst_pad < 0.15, f"padding overhead {worst_pad:.2%} >= 15%"
+    return rows
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@ Public API:
   MTTKRPPlan, make_plan, mttkrp                               (mttkrp)
   cpd_als, CPDResult                                          (cpd)
 """
-from .als_device import cpd_als_fused, sweep_cache_stats
+from .als_device import cpd_als_fused, state_from_factors, sweep_cache_stats
 from .coo import SparseTensor, frostt_like, low_rank_sparse, random_sparse
 from .cpd import CPDResult, cpd_als
 from .layout import ModeLayout, build_all_mode_layouts, build_mode_layout, format_memory_report
@@ -17,14 +17,15 @@ from .load_balance import (DeviceProfile, Partitioning, Scheme,
                            scheme_cost)
 from .mttkrp import MTTKRPPlan, make_plan, mttkrp, mttkrp_dense_ref
 from .plan import (DeviceShards, ModePlan, PartitionPlan,
-                   build_device_shards, plan_bucket, plan_layout,
-                   plan_tensor, quantize_nnz, slab_cap)
+                   build_device_shards, density_profile, plan_bucket,
+                   plan_layout, plan_tensor, quantize_nnz, slab_cap)
 
 __all__ = [
     "DeviceShards", "ModePlan", "PartitionPlan", "build_device_shards",
     "plan_bucket", "plan_layout", "plan_tensor", "quantize_nnz", "slab_cap",
     "SparseTensor", "frostt_like", "low_rank_sparse", "random_sparse",
-    "CPDResult", "cpd_als", "cpd_als_fused", "sweep_cache_stats",
+    "CPDResult", "cpd_als", "cpd_als_fused", "state_from_factors",
+    "sweep_cache_stats", "density_profile",
     "ModeLayout", "build_all_mode_layouts", "build_mode_layout", "format_memory_report",
     "DeviceProfile", "Partitioning", "Scheme", "balance_bound_holds",
     "choose_scheme", "choose_scheme_cost_based", "partition_mode", "scheme_cost",

@@ -73,6 +73,8 @@ def cpd_als(
     backend: str = "segment",
     engine: str = "fused",
     check_every: int = 1,
+    method: str = "cp",
+    init_state: tuple | None = None,
     mttkrp_fn: Callable | None = None,
     verbose: bool = False,
 ) -> CPDResult:
@@ -84,16 +86,30 @@ def cpd_als(
     keeps the original per-mode host loop (useful for benchmarking the
     traffic the fused engine removes).  A custom ``mttkrp_fn(plan, factors,
     mode)`` forces the host loop (benchmarks time alternative formats
-    through it)."""
+    through it).
+
+    ``method`` selects the decomposition method from the ``repro.methods``
+    registry ('cp', 'nncp', 'masked', …) — every method runs on the fused
+    engine's shared MTTKRP substrate.  ``init_state`` (see
+    ``als_device.state_from_factors``) warm-starts from existing factors
+    (the streaming path)."""
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}")
+    # A custom mttkrp_fn forces the host loop (below), which is plain-CP
+    # only — refuse rather than silently dropping method/init_state.
+    if (engine == "host" or mttkrp_fn is not None) and (
+            method != "cp" or init_state is not None):
+        raise ValueError(
+            "engine='host' (and the custom-mttkrp_fn host loop) supports "
+            "only method='cp' with random init; methods and warm starts "
+            "run on the fused engine")
     if engine == "fused" and mttkrp_fn is None:
         from .als_device import cpd_als_fused
 
         return cpd_als_fused(
             tensor, rank, plan=plan, kappa=kappa, n_iters=n_iters, tol=tol,
             seed=seed, backend=backend, check_every=check_every,
-            verbose=verbose,
+            method=method, init_state=init_state, verbose=verbose,
         )
     t_start = time.perf_counter()
     rng = np.random.default_rng(seed)

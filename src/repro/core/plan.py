@@ -174,6 +174,70 @@ class _UniformModeStats:
         return [w for w in range(self.nmodes) if w != self.mode]
 
 
+DENSITY_BINS = 8
+
+
+class _ObservedModeStats(_UniformModeStats):
+    """Bucket-planning stand-in built from an OBSERVED row-density profile
+    instead of the uniform prior: ``profile`` is the fraction of nnz mass
+    in each of ``DENSITY_BINS`` equal row-count bins of the
+    descending-sorted row loads (``serve.metrics`` accumulates it per
+    bucket from real flushed batches).  Rows within a bin share its mass,
+    so ``row_ptr`` reproduces the stream's skew at bin granularity and
+    the cost model prices candidate tilings against what the bucket
+    actually serves — the feedback loop that stops skewed streams being
+    priced against a uniform distribution.
+
+    Note the resulting ``slab_cap`` stays the data-independent worst-case
+    bound (it is a function of the CHOSEN tiling only), so every bucket
+    member still packs within the plan regardless of its true skew — the
+    profile shifts the tiling *choice*, never the validity envelope."""
+
+    def __init__(self, shape, mode, nnz, profile):
+        super().__init__(shape, mode, nnz)
+        masses = np.asarray(profile, dtype=np.float64)
+        if masses.ndim != 1 or masses.size != DENSITY_BINS:
+            raise ValueError(
+                f"density profile must have {DENSITY_BINS} bins, got "
+                f"{masses.shape}")
+        masses = np.maximum(masses, 0.0)
+        total = masses.sum()
+        masses = (masses / total) if total > 0 else np.full(
+            DENSITY_BINS, 1.0 / DENSITY_BINS)
+        # Spread each bin's mass uniformly over its rows (descending-
+        # sorted order — layouts relabel rows anyway, so the sorted
+        # profile is the canonical representation).
+        edges = np.round(np.linspace(0, self.num_rows,
+                                     DENSITY_BINS + 1)).astype(np.int64)
+        loads = np.zeros(self.num_rows, dtype=np.float64)
+        for b in range(DENSITY_BINS):
+            lo, hi = edges[b], edges[b + 1]
+            if hi > lo:
+                loads[lo:hi] = masses[b] * self.nnz / (hi - lo)
+        row_ptr = np.zeros(self.num_rows + 1, dtype=np.float64)
+        np.cumsum(loads, out=row_ptr[1:])
+        self.row_ptr = np.round(row_ptr).astype(np.int64)
+
+
+def density_profile(indices: np.ndarray, shape, mode: int,
+                    bins: int = DENSITY_BINS) -> tuple[float, ...]:
+    """Observed row-density profile of one tensor along ``mode``: fraction
+    of nnz mass per equal-row-count bin of the DESCENDING-sorted row
+    loads.  The serving metrics EWMA these per bucket class and feed them
+    back into ``plan_bucket``."""
+    num_rows = int(shape[mode])
+    counts = np.sort(np.bincount(indices[:, mode],
+                                 minlength=num_rows))[::-1]
+    total = counts.sum()
+    if total == 0:
+        return tuple([1.0 / bins] * bins)
+    edges = np.round(np.linspace(0, num_rows, bins + 1)).astype(np.int64)
+    return tuple(
+        float(counts[edges[b]:edges[b + 1]].sum() / total)
+        for b in range(bins)
+    )
+
+
 def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
                *, block_rows: int | None, tile: int | None) -> ModePlan:
     if block_rows is None or tile is None:
@@ -199,18 +263,30 @@ def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
 @functools.lru_cache(maxsize=None)
 def plan_bucket(shape: tuple[int, ...], nnz_cap: int, rank: int,
                 kappa: int = 1, *, block_rows: int | None = None,
-                tile: int | None = None) -> PartitionPlan:
+                tile: int | None = None,
+                density: tuple | None = None) -> PartitionPlan:
     """Static plan for a (shape, nnz_cap) bucket class — NO tensor data.
 
     The cost model prices each candidate tiling against a uniform nnz
-    distribution (the only data-independent assumption available at
-    bucket-planning time); the resulting caps are valid for every member
-    by construction (``slab_cap`` bounds any distribution).  Cached: all
-    batches of a warm bucket class share one plan object."""
+    distribution by default (the only data-independent assumption
+    available at bucket-planning time); ``density`` — a per-mode tuple of
+    ``DENSITY_BINS`` observed row-mass fractions, fed back from
+    ``serve.metrics`` — replaces the uniform prior with the stream's real
+    skew.  Either way the resulting caps are valid for every member by
+    construction (``slab_cap`` bounds any distribution).  Cached: all
+    batches of a warm bucket class share one plan object (callers
+    quantize the density profile so the cache stays small)."""
     shape = tuple(int(s) for s in shape)
+    if density is not None and len(density) != len(shape):
+        raise ValueError(
+            f"density must carry one profile per mode ({len(shape)}), got "
+            f"{len(density)}")
     modes = []
     for d in range(len(shape)):
-        stats = _UniformModeStats(shape, d, nnz_cap)
+        if density is not None and density[d] is not None:
+            stats = _ObservedModeStats(shape, d, nnz_cap, density[d])
+        else:
+            stats = _UniformModeStats(shape, d, nnz_cap)
         factor_rows = sum(shape[w] for w in stats.input_modes())
         modes.append(_mode_plan(stats, d, rank, factor_rows, nnz_cap,
                                 block_rows=block_rows, tile=tile))

@@ -42,6 +42,12 @@ class PackedModeLayout:
     input_modes: tuple[int, ...]
     pad_fraction: float        # padding overhead (diagnostic)
     num_real_slabs: int = -1   # slabs before cap padding (-1: no padding)
+    # (nnz,) int32: flat position in vals_packed[0] of each *layout-order*
+    # entry.  Entries map to exactly one valid slot, so scattering a fresh
+    # value vector through this map rebuilds vals_packed on device — the
+    # mask-weighted MTTKRP path re-threads per-sweep residual values
+    # through the SAME packed slabs without repacking on host.
+    val_scatter: np.ndarray | None = None
 
     @property
     def num_slabs(self) -> int:
@@ -113,10 +119,19 @@ def pack_slabs(
         lrow_p = np.where(
             valid, rows[src_c] - slab_block[:, None] * block_rows, 0
         ).astype(np.int32)
+        # Invert the (layout entry -> packed slot) placement: slabs tile
+        # each row block's [start, end) range contiguously, so every layout
+        # position lands in exactly one valid slot.  Cap padding appends
+        # whole slabs, which leaves these flat positions untouched.
+        flat = (np.arange(G, dtype=np.int64)[:, None] * tile
+                + np.arange(tile, dtype=np.int64)[None, :])
+        val_scatter = np.empty(nnz, dtype=np.int32)
+        val_scatter[src[valid]] = flat[valid].astype(np.int32)
     else:
         vals_p = np.zeros((G, tile), np.float32)
         idx_p = np.zeros((G, tile, W), np.int32)
         lrow_p = np.zeros((G, tile), np.int32)
+        val_scatter = np.zeros(0, dtype=np.int32)
 
     G_real = G
     if num_slabs_cap is not None:
@@ -157,6 +172,7 @@ def pack_slabs(
         input_modes=tuple(input_modes) or tuple(range(W)),
         pad_fraction=float(pad),
         num_real_slabs=G_real,
+        val_scatter=val_scatter,
     )
 
 

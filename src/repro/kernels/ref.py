@@ -54,6 +54,52 @@ def mttkrp_coo(
     return jax.ops.segment_sum(acc, indices[:, mode], num_segments=num_rows)
 
 
+def cp_model_at_coords(
+    indices: jnp.ndarray,         # (nnz, N) int32 canonical COO coordinates
+    factors: list[jnp.ndarray],   # N factor matrices (I_d, R)
+    weights: jnp.ndarray,         # (R,)
+) -> jnp.ndarray:
+    """CP model values at sparse coordinates: sum_r w_r * prod_d Y_d[i_d, r]."""
+    acc = jnp.ones((indices.shape[0], weights.shape[0]), jnp.float32)
+    for d, fac in enumerate(factors):
+        acc = acc * jnp.take(fac, indices[:, d], axis=0).astype(jnp.float32)
+    return acc @ weights.astype(jnp.float32)
+
+
+def mttkrp_masked_residual(
+    indices: jnp.ndarray,         # (nnz, N) int32 observed coordinates
+    values: jnp.ndarray,          # (nnz,) observed values
+    entry_weights: jnp.ndarray,   # (nnz,) observation weights (0 = missing)
+    factors: list[jnp.ndarray],   # N factor matrices (I_d, R)
+    weights: jnp.ndarray,         # (R,) lambda
+    mode: int,
+    num_rows: int,
+) -> jnp.ndarray:
+    """Mask-weighted MTTKRP of the EM-filled tensor (tensor completion).
+
+    The filled tensor is ``Xf = model + W * (X - model)`` (observed entries
+    keep their values, unobserved ones are imputed from the current model),
+    so its MTTKRP splits into a sparse residual term over observed
+    coordinates — the SAME spMTTKRP kernel, with values ``w_e*(x - model)``
+    — plus a rank-R closed form for the dense model term:
+    ``MTTKRP(model, d) = (Y_d * lambda) @ hadamard_{w != d}(Y_w^T Y_w)``.
+    Zero-weight entries contribute exactly +0.0, which is what keeps the
+    serving path's nnz padding an exact no-op for the masked method.
+    """
+    resid = entry_weights.astype(jnp.float32) * (
+        values.astype(jnp.float32) - cp_model_at_coords(indices, factors, weights))
+    sparse = mttkrp_coo(indices, resid, factors, mode, num_rows)
+    rank = weights.shape[0]
+    V = jnp.ones((rank, rank), jnp.float32)
+    for w, fac in enumerate(factors):
+        if w != mode:
+            fac = fac.astype(jnp.float32)
+            V = V * (fac.T @ fac)
+    dense = (factors[mode].astype(jnp.float32)
+             * weights[None, :].astype(jnp.float32)) @ V
+    return sparse + dense
+
+
 def mttkrp_sorted_segments(
     input_indices: jnp.ndarray,   # (nnz, W) int32, input-mode columns only
     rows: jnp.ndarray,            # (nnz,) int32 relabeled output rows, sorted

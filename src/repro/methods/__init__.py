@@ -1,0 +1,38 @@
+"""Decomposition-methods subsystem: many solvers, one MTTKRP substrate.
+
+MTTKRP is the shared bottleneck of the whole CP family, not just
+unconstrained ALS — so the engine (fused sweeps), serving (bucketed
+vmapped batches), and planning (static partition plans) layers built in
+PRs 1–3 are method-agnostic, and this package is the methods layer on
+top of them:
+
+  registry   — ``MethodSpec`` catalogue; ``cpd_als(method=...)``,
+               ``ALSRunner``, and the batched service route by name, and
+               ``serve.buckets`` keys request classes on
+               (shape, nnz-bucket, method).
+  plain      — unconstrained CP-ALS ('cp', the inline substrate path).
+  nncp       — nonnegative CP via HALS: factors provably >= 0, fit
+               monotone nondecreasing; identical MTTKRP + gram tail.
+  masked     — masked/weighted CP completion: EM residual spMTTKRP
+               (per-sweep values threaded through the valued kernel
+               entry point) + closed-form dense term; observed-only fit;
+               weight-0 padding keeps serving exact.
+  streaming  — stateful ``StreamingCP`` session: warm-started refinement
+               folds nonzero increments into existing factors without a
+               full refit (inner method pluggable).
+
+Adding a solver = writing ``build_sweep(ctx)`` against
+``core.als_device.SweepContext`` and registering a ``MethodSpec`` —
+bucketing, batching, caching, and scheduling come for free.
+"""
+from .registry import (MethodSpec, batchable_methods, get_method,
+                       list_methods, register_method)
+from . import plain as _plain          # noqa: F401  (registers 'cp')
+from . import nncp as _nncp            # noqa: F401  (registers 'nncp')
+from . import masked as _masked        # noqa: F401  (registers 'masked')
+from .streaming import StreamingCP     # (registers 'streaming')
+
+__all__ = [
+    "MethodSpec", "register_method", "get_method", "list_methods",
+    "batchable_methods", "StreamingCP",
+]

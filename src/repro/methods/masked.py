@@ -1,0 +1,106 @@
+"""Masked/weighted CP for tensor completion on the shared substrate.
+
+The COO nonzero list is reinterpreted as the OBSERVED-entry set: the
+goal is ``min sum_{observed e} w_e (x_e - model_e)^2`` with everything
+off the list missing (not zero) — the recommendation/imputation
+workload.  The classic EM reduction keeps the whole thing on the sparse
+kernels: per mode, fill the missing entries with the current model,
+
+    Xf = model + W * (X - model),
+
+whose MTTKRP splits into (a) the SAME spMTTKRP kernel over the observed
+coordinates with per-sweep residual values ``w_e * (x_e - model_e)``,
+plus (b) a closed-form rank-R dense term
+``(Y_d * lambda) @ hadamard_{w != d}(gram_w)`` — then the ordinary
+ridge-regularized LS solve (``ctx.solve``, shared with plain CP).  Each
+mode update exactly minimizes the filled-tensor objective, which
+majorizes the observed objective at the current iterate, so the observed
+loss is monotone nonincreasing (EM).
+
+Residual values change every sweep, so mode data is STRUCTURAL only
+(``valued_mode_data``): the canonical->layout permutation (segment), the
+canonical->slab ``val_scatter`` (pallas, computed once at pack time in
+``kernels.ops``), or nothing (coo) — values are scattered on device
+through ``ctx.mttkrp_valued``, never repacked on host.
+
+Per-entry weights make nnz padding exact for the serving path: padded
+entries get weight 0 and contribute +0.0 to the residual MTTKRP and the
+fit, so a padded masked request is bit-equivalent to the unpadded one —
+the same invariance plain CP gets from zero VALUES, recovered here from
+zero WEIGHTS (a zero-valued padding entry would otherwise assert the
+tensor is observed-zero at the origin and bias the completion).
+
+The fit reported is over observed entries only:
+``1 - sqrt(sum w_e (x_e - model_e)^2) / sqrt(sum w_e x_e^2)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ref import cp_model_at_coords
+from .registry import MethodSpec, register_method
+
+
+def make_fit_data(tensor):
+    """(indices, values, entry_weights, weighted ||X||²) — all observed
+    entries weighted 1 (the serving path appends weight-0 padding)."""
+    vals = tensor.values.astype(np.float32)
+    return (
+        jnp.asarray(tensor.indices),
+        jnp.asarray(vals),
+        jnp.ones((tensor.nnz,), jnp.float32),
+        jnp.asarray(float(vals @ vals), jnp.float32),
+    )
+
+
+def build_sweep(ctx):
+    nmodes = ctx.nmodes
+    if ctx.mttkrp_valued is None:
+        raise NotImplementedError(
+            "masked CP needs the valued MTTKRP entry point (not available "
+            "on the distributed axis path)")
+
+    model_at = cp_model_at_coords    # one formula, shared with kernels.ref
+
+    def sweep(state, mode_data_all, fit_data):
+        factors, grams, weights = list(state[0]), list(state[1]), state[2]
+        indices, values, ew, norm_x_sq = fit_data
+        for d in range(nmodes):
+            # Fresh residual per MODE (the model moved): exact EM.
+            with jax.named_scope("residual"):
+                resid = ew * (values - model_at(indices, factors, weights))
+            with jax.named_scope("mttkrp"):
+                M_sp = ctx.mttkrp_valued(d, mode_data_all[d], factors, resid)
+            with jax.named_scope("solve"):
+                V = ctx.hadamard(grams, exclude=d)
+                # Sparse residual term + closed-form dense model term =
+                # MTTKRP of the EM-filled tensor (kernels.ref.
+                # mttkrp_masked_residual is the reference formulation).
+                M = M_sp + (factors[d] * weights[None, :]) @ V
+                Yd, lam = ctx.normalize(ctx.solve(M, V))
+            factors[d] = Yd
+            grams[d] = Yd.T @ Yd
+            weights = lam
+        with jax.named_scope("fit"):
+            resid = values - model_at(indices, factors, weights)
+            resid_sq = jnp.sum(ew * resid * resid)
+            fit = 1.0 - jnp.sqrt(resid_sq) / jnp.maximum(
+                jnp.sqrt(norm_x_sq), 1e-12)
+        return (tuple(factors), tuple(grams), weights), fit
+
+    return sweep
+
+
+MASKED = register_method(MethodSpec(
+    name="masked",
+    description="Masked/weighted CP completion (EM over observed entries): "
+                "residual spMTTKRP + closed-form dense term, observed-only "
+                "fit; padding is weight-0 and therefore exact.",
+    build_sweep=build_sweep,
+    make_fit_data=make_fit_data,
+    valued_mode_data=True,
+    weighted_fit=True,
+))

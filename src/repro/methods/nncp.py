@@ -1,0 +1,89 @@
+"""Nonnegative CP via HALS on the shared fused-MTTKRP substrate.
+
+HALS (hierarchical alternating least squares, Cichocki & Phan) replaces
+the mode-d normal-equations solve with R exact nonnegative coordinate
+minimizations — one per factor column:
+
+    y_r <- max(0, (M[:, r] - sum_{s != r} y_s V[s, r]) / V[r, r])
+
+where ``M`` is the SAME MTTKRP the plain sweep computes and ``V`` the
+same Hadamard product of input grams: the kernel substrate is untouched,
+only the R x R tail differs.  Each column update exactly minimizes the
+quadratic objective over that column subject to y >= 0 (the objective is
+coordinate-separable given the others), so the loss is monotone
+nonincreasing — i.e. the fit is monotone NONDECREASING — per column, per
+mode, per sweep, for ANY input tensor; and the clamp keeps every factor
+entry provably >= 0 from a nonnegative init onward (column
+normalization divides by a positive scalar and cannot break the
+invariant).  ``tests/methods/test_nncp.py`` asserts both properties.
+
+Weight handling mirrors plain CP: factors are stored column-normalized
+with the scale in ``weights``; the update absorbs the weights into the
+active mode first (``Yt = Y_d * lam`` — model-invariant, so the
+monotonicity argument applies to the true objective) and re-extracts
+them afterwards, which keeps the shared sparse fit formula valid
+unchanged.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .registry import MethodSpec, register_method
+
+_EPS = 1e-12
+
+
+def init_state_host_nonneg(tensor_shape, rank: int, seed: int):
+    """Strictly nonnegative host init (|N(0,1)| + 0.01): the HALS clamp
+    preserves nonnegativity, so the init is where the invariant starts."""
+    rng = np.random.default_rng(seed)
+    factors = tuple(
+        (np.abs(rng.standard_normal((I, rank))) + 0.01).astype(np.float32)
+        for I in tensor_shape
+    )
+    grams = tuple(F.T @ F for F in factors)
+    weights = np.ones((rank,), np.float32)
+    return (factors, grams, weights)
+
+
+def build_sweep(ctx):
+    nmodes, rank = ctx.nmodes, ctx.rank
+
+    def sweep(state, mode_data_all, fit_data):
+        factors, grams, weights = list(state[0]), list(state[1]), state[2]
+        for d in range(nmodes):
+            with jax.named_scope("mttkrp"):
+                M = ctx.one_mttkrp(d, mode_data_all[d], factors)
+            with jax.named_scope("hals"):
+                V = ctx.hadamard(grams, exclude=d)
+                Yt = factors[d] * weights[None, :]
+                # R exact nonnegative column minimizations, unrolled (R is
+                # static).  A column whose gram diagonal collapsed keeps
+                # its previous value instead of dividing by ~0.
+                for r in range(rank):
+                    num = (M[:, r] - Yt @ V[:, r]
+                           + Yt[:, r] * V[r, r])
+                    col = jnp.maximum(num, 0.0) / jnp.maximum(V[r, r], _EPS)
+                    Yt = Yt.at[:, r].set(
+                        jnp.where(V[r, r] > _EPS, col, Yt[:, r]))
+                Yd, lam = ctx.normalize(Yt)
+            factors[d] = Yd
+            grams[d] = Yd.T @ Yd
+            weights = lam
+        with jax.named_scope("fit"):
+            fit = ctx.sparse_fit(factors, grams, weights, fit_data)
+        return (tuple(factors), tuple(grams), weights), fit
+
+    return sweep
+
+
+NONNEGATIVE = register_method(MethodSpec(
+    name="nncp",
+    description="Nonnegative CP (HALS): factors provably >= 0, fit "
+                "monotone nondecreasing; same MTTKRP substrate as plain CP.",
+    build_sweep=build_sweep,
+    init_state_host=init_state_host_nonneg,
+))

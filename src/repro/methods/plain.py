@@ -1,0 +1,16 @@
+"""The registry entry for unconstrained CP-ALS.
+
+The sweep itself lives inline in ``core.als_device.build_sweep_fn``
+(``method="cp"`` short-circuits before the registry lookup — the hot
+default path takes no indirection); this spec exists so 'cp' shows up in
+``list_methods()`` and so the serving layer can validate method names
+uniformly."""
+from __future__ import annotations
+
+from .registry import MethodSpec, register_method
+
+CP = register_method(MethodSpec(
+    name="cp",
+    description="Unconstrained CP-ALS (ridge-regularized normal equations "
+                "with pinv rescue) — the inline substrate path.",
+))

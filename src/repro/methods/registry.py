@@ -1,0 +1,85 @@
+"""Decomposition-method registry: one catalogue of update rules that all
+ride the shared fused-MTTKRP substrate.
+
+A *method* is an update rule plugged into the sweep the engines already
+know how to run (``core.als_device.build_sweep_fn``): the substrate owns
+the MTTKRP kernels, the partition plans, the ``lax.scan`` check windows,
+the executable cache, and the vmapped batched service; a method owns
+only what is genuinely different about it —
+
+  * ``build_sweep(ctx)``   — given a ``SweepContext`` (MTTKRP primitives,
+    ridge solver, sparse fit), return
+    ``sweep(state, mode_data_all, fit_data) -> (state, fit)`` with the
+    same state pytree contract as plain CP, so the sequential scan
+    block, ``jax.vmap``, and donation all apply unchanged.
+  * ``init_state_host``    — seeded host-numpy init (e.g. nonnegative).
+  * ``make_fit_data``      — per-request device fit inputs when the
+    method's fit differs (e.g. masked: per-entry observation weights).
+  * ``valued_mode_data``   — the method re-threads fresh per-sweep values
+    through the kernels (structural mode data + the valued MTTKRP entry
+    point) instead of consuming values baked into the layout.
+  * stateful methods (streaming) ship a ``session_factory`` instead of a
+    sweep: they *drive* the substrate across calls rather than replacing
+    its inner loop.
+
+Registering a solver is the whole integration: ``cpd_als(method=...)``,
+``ALSRunner``, and the batched service route by name, and
+``serve.buckets`` keys request classes on (shape, nnz-bucket, method) so
+mixed-method streams batch correctly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """One decomposition method's contract with the substrate."""
+
+    name: str
+    description: str = ""
+    # (ctx: core.als_device.SweepContext) -> sweep fn; None for the inline
+    # CP path and for stateful methods.
+    build_sweep: Callable | None = None
+    # (shape, rank, seed) -> host state tuple; None -> the shared default.
+    init_state_host: Callable | None = None
+    # (tensor) -> device fit_data pytree; None -> CP's (idx, vals, norm²).
+    make_fit_data: Callable | None = None
+    # True: mode data is structural-only and the sweep threads fresh
+    # values through the valued MTTKRP entry point each call.
+    valued_mode_data: bool = False
+    # True: fit_data carries per-entry observation weights (the serving
+    # path zeroes them on nnz padding so padding stays an exact no-op).
+    weighted_fit: bool = False
+    stateful: bool = False
+    session_factory: Callable | None = None
+
+
+_REGISTRY: dict[str, MethodSpec] = {}
+
+
+def register_method(spec: MethodSpec, *, override: bool = False) -> MethodSpec:
+    if not override and spec.name in _REGISTRY:
+        raise ValueError(f"method {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_method(name: str) -> MethodSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown decomposition method {name!r}; registered: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def list_methods() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def batchable_methods() -> list[str]:
+    """Methods the vmapped batched service can execute directly (stateful
+    methods drive the service through their sessions instead)."""
+    return sorted(n for n, s in _REGISTRY.items() if not s.stateful)

@@ -143,33 +143,42 @@ class ALSRunner:
                 f"(mean {self.monitor.mean*1e3:.0f} ms)")
 
     def decompose(self, tensor: SparseTensor, *, n_iters: int = 25,
-                  tol: float = 1e-5, seed: int = 0, verbose: bool = False,
+                  tol: float = 1e-5, seed: int = 0, method: str = "cp",
+                  init_state: tuple | None = None, verbose: bool = False,
                   log: Callable[[str], None] = print) -> CPDResult:
+        """Decompose one tensor.  ``method`` selects the decomposition
+        method ('cp', 'nncp', 'masked' — see ``repro.methods``); in
+        batched mode the request lands in its (shape, nnz-bucket, method)
+        class, so mixed-method callers batch per method automatically.
+        ``init_state`` warm-starts from existing factors (streaming)."""
         from ..core.cpd import cpd_als
 
         before = self._cache_stats()
         t0 = time.perf_counter()
         if self.mode == "batched":
             fut = self.service.submit(tensor, n_iters=n_iters, tol=tol,
-                                      seed=seed)
+                                      seed=seed, method=method,
+                                      init_state=init_state)
             res = fut.result()    # force-flushes this request's bucket
             if verbose:           # post-hoc trajectory at window boundaries
                 for i in range(self.check_every - 1, len(res.fits),
                                self.check_every):
                     log(f"  ALS iter {i + 1:3d}: fit={res.fits[i]:.6f} "
-                        f"(batched)")
+                        f"(batched/{method})")
         else:
             res = cpd_als(
                 tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
                 seed=seed, backend=self.backend, engine=self.engine,
-                check_every=self.check_every, verbose=verbose,
+                check_every=self.check_every, method=method,
+                init_state=init_state, verbose=verbose,
             )
         dt = time.perf_counter() - t0
         self._record(tensor, res, dt, before, log)
         return res
 
     def decompose_async(self, tensor: SparseTensor, *, n_iters: int = 25,
-                        tol: float = 1e-5, seed: int = 0):
+                        tol: float = 1e-5, seed: int = 0,
+                        method: str = "cp", init_state: tuple | None = None):
         """Submit without blocking (batched mode only): returns a
         ``DecompositionFuture``.  The request completes when its bucket
         flushes (max-batch, max-wait via ``poll()``, ``flush()``, or the
@@ -178,7 +187,19 @@ class ALSRunner:
         if self.service is None:
             raise RuntimeError("decompose_async requires mode='batched'")
         return self.service.submit(tensor, n_iters=n_iters, tol=tol,
-                                   seed=seed)
+                                   seed=seed, method=method,
+                                   init_state=init_state)
+
+    def open_stream(self, *, method: str = "cp", refine_iters: int = 2):
+        """Open a streaming-CP session routed through this runner: every
+        cold fit and warm refinement window goes through the same front
+        door (and, in batched mode, the same bucketed service — so
+        concurrent sessions of one bucket class batch together)."""
+        from ..methods import StreamingCP
+
+        return StreamingCP(self.rank, method=method, backend=self.backend,
+                           kappa=self.kappa, check_every=self.check_every,
+                           refine_iters=refine_iters, runner=self)
 
     def poll(self) -> int:
         return self.service.poll() if self.service else 0

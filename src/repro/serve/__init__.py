@@ -4,14 +4,20 @@ One small tensor cannot saturate the device (the paper's
 overhead-dominated regime), so the throughput path is executing *many*
 decompositions per dispatch:
 
-  buckets        — quantize requests into (shape, nnz-bucket) classes;
-                   zero-pad nnz to the bucket cap (bit-exact no-op).
-  batched_engine — stack B bucket-mates, jax.vmap the fused ALS sweep,
-                   per-tensor convergence masking, executable cache.
+  buckets        — quantize requests into (shape, nnz-bucket, method)
+                   classes; zero-pad nnz to the bucket cap (bit-exact
+                   no-op; the masked method gets the same exactness from
+                   weight-0 padding).
+  batched_engine — stack B bucket-mates, jax.vmap the fused ALS sweep of
+                   the bucket's decomposition method (repro.methods),
+                   per-tensor convergence masking, warm-start
+                   init_states, executable cache.
   scheduler      — per-bucket queues, submit/future semantics,
-                   max-batch / max-wait flush triggers.
+                   max-batch / max-wait flush triggers, row-density
+                   feedback into the bucket's partition plan.
   metrics        — throughput, p50/p99 latency, padding overhead, batch
-                   occupancy, cache hit rates.
+                   occupancy, cache hit rates, per-bucket row-density
+                   EWMA (the planning feedback channel).
 
 ``runtime.ALSRunner`` fronts this service (``mode="batched"``);
 ``benchmarks/serve_bench.py`` measures it against the sequential path.

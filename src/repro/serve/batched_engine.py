@@ -20,8 +20,16 @@ mirroring the sequential engine's window structure):
   * the batch state pytree is donated (off-CPU), so XLA reuses the B-way
     buffers in place across windows.
   * executables are cached per (bucket shape, nnz cap, B, rank, backend,
-    solver, window): a warm bucket class pays zero retrace per batch.
-    ``batched_cache_stats()`` exposes the counters.
+    solver, window, METHOD): a warm bucket class pays zero retrace per
+    batch.  ``batched_cache_stats()`` exposes the counters.
+
+Decomposition methods (``repro.methods``) batch through the same door:
+``decompose_batch(method=...)`` vmaps that method's sweep under the same
+executable cache.  The masked method's mode data is structural-only
+(per-sweep residual values are scattered on device), its fit data
+carries per-entry observation weights — zeroed on nnz padding, which is
+what keeps padding exact for completion — and ``init_states`` threads
+warm starts (the streaming method's increments) through the service.
 
 Backends: ``segment`` (default; per-tensor mode layouts are stacked —
 same padded nnz ⇒ identical array shapes regardless of which
@@ -31,7 +39,15 @@ packed to the bucket's static ``core.plan`` slab cap, so the slab arrays
 share one shape and the kernel vmaps (interpret mode on CPU).  The
 pallas path packs the UNPADDED tensors (slab-cap padding replaces nnz
 padding), which keeps the batched result bit-identical to the
-per-request sequential pallas engine under the same plan.
+per-request sequential pallas engine under the same plan (the masked
+method packs the PADDED tensors instead — its weight-0 entries are
+already exact no-ops and the residual scatter needs one consistent
+canonical order).
+
+``density`` (an observed per-bucket row-density profile from
+``serve.metrics``) reprices the bucket plan's tilings against the
+stream's real skew instead of the uniform prior — see
+``core.plan.plan_bucket``.
 """
 from __future__ import annotations
 
@@ -70,7 +86,8 @@ def _all_finite(tree) -> jnp.ndarray:
 def _build_batched_block(backend: str, nmodes: int, rank: int,
                          shapes: tuple[int, ...], nnz_cap: int, batch: int,
                          interpret: bool, donate: bool, solver: str,
-                         block: int, pallas_meta: tuple | None = None):
+                         block: int, pallas_meta: tuple | None = None,
+                         method: str = "cp"):
     """Jitted ``lax.scan`` of ``block`` vmapped sweeps with per-tensor
     convergence masking.  ``nnz_cap`` and ``batch`` are part of the key so
     the cache honestly counts one executable per (bucket, B) class.
@@ -80,16 +97,17 @@ def _build_batched_block(backend: str, nmodes: int, rank: int,
     ``lax.cond`` lowers to a select that always pays the small-R SVD);
     only if any float in the result is non-finite does the window re-run
     with the guarded sweep.  Well-conditioned batches — the overwhelming
-    majority — never touch the SVD.
+    majority — never touch the SVD.  (For a method without a solve —
+    HALS — the two sweeps coincide and the cond is a cheap no-op.)
 
     carry = (state, active (B,) bool, last_fit (B,), done (B,) int32);
     returns (carry, fits (block, B))."""
     sweep_fast = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
                                            pallas_meta, interpret, solver,
-                                           fallback="none")
+                                           fallback="none", method=method)
     sweep_safe = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
                                            pallas_meta, interpret, solver,
-                                           fallback="cond")
+                                           fallback="cond", method=method)
     vfast = jax.vmap(sweep_fast, in_axes=(0, 0, 0))
     vsafe = jax.vmap(sweep_safe, in_axes=(0, 0, 0))
 
@@ -136,7 +154,7 @@ def _build_batched_block(backend: str, nmodes: int, rank: int,
 
 def batched_cache_stats():
     """(hits, misses, currsize) of the batched executable cache, keyed per
-    (bucket, B, rank, backend, window)."""
+    (bucket, B, rank, backend, window, method)."""
     info = _build_batched_block.cache_info()
     return {"hits": info.hits, "misses": info.misses,
             "currsize": info.currsize}
@@ -165,63 +183,103 @@ class BatchedEngine:
 
     # -- data staging -------------------------------------------------------
 
-    def bucket_plan(self, shape: tuple[int, ...],
-                    nnz_cap: int) -> plan_mod.PartitionPlan:
+    def bucket_plan(self, shape: tuple[int, ...], nnz_cap: int,
+                    density: tuple | None = None) -> plan_mod.PartitionPlan:
         """The static plan a (shape, nnz_cap) bucket executes under —
-        shared with the sequential path for bit-identical results."""
+        shared with the sequential path for bit-identical results.
+        ``density`` (observed per-mode row-density profile) reprices the
+        tilings against the stream's real skew."""
         return plan_mod.plan_bucket(tuple(int(s) for s in shape),
-                                    int(nnz_cap), self.rank, self.kappa)
+                                    int(nnz_cap), self.rank, self.kappa,
+                                    density=density)
+
+    def _stack_pallas(self, source: list[SparseTensor], nnz_cap: int,
+                      density, structural: bool):
+        """Pack each source tensor to the bucket plan's static slab cap:
+        slab-cap padding (appended zero slabs) replaces nnz padding, so
+        the packed arrays both stack across bucket-mates AND stay
+        bit-identical to the tensor's own sequential packing under the
+        same plan.  ``structural=True`` (masked) ships the layout
+        permutation + value scatter instead of baked values."""
+        N = source[0].nmodes
+        bplan = self.bucket_plan(tuple(source[0].shape), nnz_cap, density)
+        per_mode: list[list[tuple]] = [[] for _ in range(N)]
+        keys: list[tuple | None] = [None] * N
+        for t in source:
+            for d, lay in enumerate(build_all_mode_layouts(t, self.kappa)):
+                mp = bplan.modes[d]
+                p = kops.pack_layout(lay, block_rows=mp.block_rows,
+                                     tile=mp.tile,
+                                     num_slabs_cap=mp.slab_cap)
+                # Every bucket-mate must pack to the same static
+                # identity or vmap stacking is silently wrong.
+                if keys[d] is None:
+                    keys[d] = p.bucket_key
+                elif p.bucket_key != keys[d]:
+                    raise AssertionError(
+                        f"plan produced mismatched packings for mode "
+                        f"{d}: {p.bucket_key} vs {keys[d]}")
+                if structural:
+                    per_mode[d].append((p.rb_of, p.first, p.idx_packed,
+                                        p.lrows_packed, lay.row_perm,
+                                        lay.perm.astype(np.int32),
+                                        p.val_scatter))
+                else:
+                    per_mode[d].append((p.rb_of, p.first, p.idx_packed,
+                                        p.vals_packed, p.lrows_packed,
+                                        lay.row_perm))
+        width = 7 if structural else 6
+        mode_data_all = tuple(
+            tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode[d]]))
+                  for j in range(width))
+            for d in range(N)
+        )
+        return mode_data_all, bplan.pallas_meta()
 
     def _stack_batch(self, tensors: list[SparseTensor],
-                     padded: list[SparseTensor], nnz_cap: int):
+                     padded: list[SparseTensor], nnz_cap: int,
+                     method: str = "cp", density: tuple | None = None):
         """Stacked per-mode device arrays + fit data for the vmapped sweep.
 
         Returns ``(mode_data_all, fit_data, pallas_meta)``; the meta tuple
         is ``None`` except for the pallas backend, where it carries the
         bucket plan's static tiling (part of the executable key)."""
+        spec = None
+        if method != "cp":
+            from ..methods import get_method
+
+            spec = get_method(method)
+        structural = spec is not None and spec.valued_mode_data
         N = padded[0].nmodes
         idx = jnp.asarray(np.stack([t.indices for t in padded]))
         vals = jnp.asarray(np.stack(
             [t.values.astype(np.float32) for t in padded]))
         norms = jnp.asarray(
             np.array([t.norm() ** 2 for t in padded], dtype=np.float32))
-        fit_data = (idx, vals, norms)
+        if spec is not None and spec.weighted_fit:
+            # Observation weights: 1 on real entries, 0 on nnz padding —
+            # the masked analogue of plain CP's exact zero-value padding.
+            ew = jnp.asarray(np.stack([
+                np.concatenate([np.ones(t.nnz, np.float32),
+                                np.zeros(nnz_cap - t.nnz, np.float32)])
+                for t in tensors]))
+            fit_data = (idx, vals, ew, norms)
+        else:
+            fit_data = (idx, vals, norms)
         if self.backend == "coo":
+            if structural:
+                return tuple((idx,) for _ in range(N)), fit_data, None
             coo = (idx, vals)
             return tuple(coo for _ in range(N)), fit_data, None
         if self.backend == "pallas":
-            # Pack each UNPADDED tensor to the bucket plan's static slab
-            # cap: slab-cap padding (appended zero slabs) replaces nnz
-            # padding, so the packed arrays both stack across bucket-mates
-            # AND stay bit-identical to the tensor's own sequential
-            # packing under the same plan.
-            bplan = self.bucket_plan(tuple(padded[0].shape), nnz_cap)
-            per_mode: list[list[tuple]] = [[] for _ in range(N)]
-            keys: list[tuple | None] = [None] * N
-            for t in tensors:
-                for d, lay in enumerate(
-                        build_all_mode_layouts(t, self.kappa)):
-                    mp = bplan.modes[d]
-                    p = kops.pack_layout(lay, block_rows=mp.block_rows,
-                                         tile=mp.tile,
-                                         num_slabs_cap=mp.slab_cap)
-                    # Every bucket-mate must pack to the same static
-                    # identity or vmap stacking is silently wrong.
-                    if keys[d] is None:
-                        keys[d] = p.bucket_key
-                    elif p.bucket_key != keys[d]:
-                        raise AssertionError(
-                            f"plan produced mismatched packings for mode "
-                            f"{d}: {p.bucket_key} vs {keys[d]}")
-                    per_mode[d].append((p.rb_of, p.first, p.idx_packed,
-                                        p.vals_packed, p.lrows_packed,
-                                        lay.row_perm))
-            mode_data_all = tuple(
-                tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode[d]]))
-                      for j in range(6))
-                for d in range(N)
-            )
-            return mode_data_all, fit_data, bplan.pallas_meta()
+            # Masked packs the PADDED tensors (weight-0 entries are exact
+            # no-ops and the residual scatter needs the padded canonical
+            # order); plain/nncp pack the UNPADDED ones for bit-identity
+            # with the sequential path.
+            source = padded if structural else tensors
+            mode_data_all, meta = self._stack_pallas(
+                source, nnz_cap, density, structural)
+            return mode_data_all, fit_data, meta
         # segment: build each tensor's mode-specific layouts on host, then
         # stack.  Padding to a common nnz is exactly what makes the layout
         # arrays stack — every bucket-mate yields (nnz_cap, ·) per mode.
@@ -229,9 +287,14 @@ class BatchedEngine:
         for t in padded:
             for d, lay in enumerate(build_all_mode_layouts(t, self.kappa)):
                 im = lay.input_modes()
-                per_mode_s[d].append((lay.indices[:, im], lay.rows,
-                                      lay.values.astype(np.float32),
-                                      lay.row_perm))
+                if structural:
+                    per_mode_s[d].append((lay.indices[:, im], lay.rows,
+                                          lay.row_perm,
+                                          lay.perm.astype(np.int32)))
+                else:
+                    per_mode_s[d].append((lay.indices[:, im], lay.rows,
+                                          lay.values.astype(np.float32),
+                                          lay.row_perm))
         mode_data_all = tuple(
             tuple(jnp.asarray(np.stack([rec[j] for rec in per_mode_s[d]]))
                   for j in range(4))
@@ -249,11 +312,19 @@ class BatchedEngine:
         tol: float | Sequence[float] = 1e-5,
         seeds: Sequence[int] | None = None,
         nnz_cap: int | None = None,
+        method: str = "cp",
+        init_states: Sequence[tuple | None] | None = None,
+        density: tuple | None = None,
     ) -> list[CPDResult]:
         """Decompose B same-shape tensors in vmapped lockstep.
 
         ``n_iters`` / ``tol`` / ``seeds`` may be scalars or per-tensor
         sequences (requests batched together keep their own budgets).
+        ``method`` selects the decomposition method (all B requests share
+        it — the scheduler keys buckets on method); ``init_states`` is an
+        optional per-tensor list of host state tuples (see
+        ``als_device.state_from_factors``) warm-starting individual
+        requests — ``None`` entries fall back to the method's seeded init.
         Returned ``CPDResult``s carry per-tensor factors/fits/iters;
         ``total_seconds`` and ``host_syncs`` are *batch-level* (shared by
         all B results — the whole point is that the batch paid them once).
@@ -261,6 +332,15 @@ class BatchedEngine:
         tensors = list(tensors)
         if not tensors:
             return []
+        spec = None
+        if method != "cp":
+            from ..methods import get_method
+
+            spec = get_method(method)
+            if spec.stateful:
+                raise ValueError(
+                    f"method {method!r} is stateful; drive it through its "
+                    f"session API (ALSRunner.open_stream)")
         t_start = time.perf_counter()
         B = len(tensors)
         shape = tuple(int(s) for s in tensors[0].shape)
@@ -282,13 +362,22 @@ class BatchedEngine:
             seeds = [0] * B
         if len(seeds) != B:
             raise ValueError("seeds must match batch size")
+        if init_states is not None and len(init_states) != B:
+            raise ValueError("init_states must match batch size")
 
         mode_data_all, fit_data, pallas_meta = self._stack_batch(
-            tensors, padded, cap)
+            tensors, padded, cap, method, density)
         # Host-side init, stacked once: one upload per state leaf instead
         # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
-        inits = [als_device.init_state_host(shape, self.rank, int(s))
-                 for s in seeds]
+        init_fn = (spec.init_state_host if spec is not None
+                   and spec.init_state_host is not None
+                   else als_device.init_state_host)
+        inits = [
+            (init_states[i] if init_states is not None
+             and init_states[i] is not None
+             else init_fn(shape, self.rank, int(seeds[i])))
+            for i in range(B)
+        ]
         state = (
             tuple(jnp.asarray(np.stack([st[0][d] for st in inits]))
                   for d in range(N)),
@@ -314,6 +403,7 @@ class BatchedEngine:
             fn = _build_batched_block(
                 self.backend, N, self.rank, shape, cap, B,
                 self.interpret, self.donate, self.solver, k, pallas_meta,
+                method,
             )
             carry, fits_blk = fn(carry, mode_data_all, fit_data,
                                  tol_dev, max_iters_dev)

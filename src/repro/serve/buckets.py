@@ -29,6 +29,10 @@ engine in this repo, not merely an approximate one:
     their relative accumulation order.
   * the sparse fit: padded values are 0, so the inner product and
     ``||X||`` are untouched.
+  * the masked method additionally needs padding entries to carry
+    observation weight 0 (a zero VALUE would claim the tensor is
+    observed-zero at the origin); the batched engine builds those
+    weights from the real-vs-padded split, restoring the same exactness.
 
 ``tests/serve/test_buckets.py`` asserts the resulting factors are
 bit-identical, padded vs unpadded.
@@ -45,14 +49,25 @@ from ..core.coo import SparseTensor
 
 @dataclasses.dataclass(frozen=True, order=True)
 class Bucket:
-    """One (shape, nnz-cap) equivalence class of the request stream."""
+    """One (shape, nnz-cap, method) equivalence class of the request
+    stream.  Method is part of the key because bucket-mates must share a
+    sweep EXECUTABLE, and the method decides the sweep body (and, for
+    'masked', even the mode-data layout) — a mixed-method stream
+    therefore batches into per-method buckets that still share plans and
+    kernels underneath."""
 
     shape: tuple[int, ...]
     nnz_cap: int
+    method: str = "cp"
 
     @property
     def nmodes(self) -> int:
         return len(self.shape)
+
+    @property
+    def key(self) -> tuple:
+        """Hashable identity used by metrics and density tracking."""
+        return (self.shape, self.nnz_cap, self.method)
 
     def padding_fraction(self, nnz: int) -> float:
         """Fraction of the bucket's nnz slots wasted on zero padding."""
@@ -103,9 +118,9 @@ class BucketPolicy:
             nnz, mode=self.mode, quantum=self.quantum,
             growth=self.growth, min_cap=self.min_cap)
 
-    def bucket_for(self, tensor: SparseTensor) -> Bucket:
+    def bucket_for(self, tensor: SparseTensor, method: str = "cp") -> Bucket:
         return Bucket(tuple(int(s) for s in tensor.shape),
-                      self.nnz_cap(tensor.nnz))
+                      self.nnz_cap(tensor.nnz), method)
 
 
 def pad_tensor(tensor: SparseTensor, nnz_cap: int) -> SparseTensor:

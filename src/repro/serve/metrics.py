@@ -12,6 +12,15 @@ uptime), while latency percentiles are computed over a sliding window of
 the most recent ``window`` requests (and ``batches`` retains only the
 most recent events, for debugging).
 
+The metrics are also the serving layer's feedback channel INTO planning:
+``record_density`` accumulates an EWMA of each bucket's observed per-mode
+row-density profile (fraction of nnz mass per descending-sorted row bin,
+``core.plan.density_profile``), and ``row_density`` hands the scheduler a
+QUANTIZED copy to pass to ``core.plan.plan_bucket(density=...)`` — so a
+skewed stream's tilings are priced against its real skew instead of the
+uniform prior, while quantization (1/16 grid) bounds how many distinct
+plans (and therefore executables) one bucket can cycle through.
+
 All recording goes through the scheduler's lock, so the counters need no
 locking of their own.
 """
@@ -21,6 +30,9 @@ import collections
 import dataclasses
 
 import numpy as np
+
+_DENSITY_EWMA = 0.3
+_DENSITY_QUANTUM = 1.0 / 16.0
 
 
 @dataclasses.dataclass
@@ -55,6 +67,8 @@ class ServiceMetrics:
         self._cache_misses = 0
         self._occupancy_sum = 0.0
         self._triggers = collections.Counter()
+        # bucket key -> list of per-mode EWMA row-density profiles
+        self._density: dict[tuple, list[np.ndarray]] = {}
 
     # -- write side (called by the scheduler under its lock) ----------------
 
@@ -77,6 +91,45 @@ class ServiceMetrics:
         if event.max_batch:
             self._occupancy_sum += event.batch_size / event.max_batch
         self._triggers[event.trigger] += 1
+
+    def record_density(self, bucket_key: tuple,
+                       profiles: tuple[tuple[float, ...] | None, ...]):
+        """EWMA-fold one flushed batch's observed per-mode row-density
+        profiles into the bucket's running estimate.  A ``None`` profile
+        (mode too large to profile cheaply) leaves that mode on the
+        uniform prior."""
+        cur = self._density.get(bucket_key)
+        if cur is None:
+            self._density[bucket_key] = [
+                None if p is None else np.asarray(p, dtype=np.float64)
+                for p in profiles]
+            return
+        for d, p in enumerate(profiles):
+            if p is None:
+                continue
+            if cur[d] is None:
+                cur[d] = np.asarray(p, dtype=np.float64)
+            else:
+                cur[d] = ((1.0 - _DENSITY_EWMA) * cur[d]
+                          + _DENSITY_EWMA * np.asarray(p, dtype=np.float64))
+
+    def row_density(self, bucket_key: tuple) -> tuple | None:
+        """Quantized per-mode density profiles for ``plan_bucket`` (None
+        until the bucket has flushed at least once; per-mode None where
+        never profiled).  Quantizing to a 1/16 grid keeps the profile
+        hashable AND bounds the number of distinct plans (hence
+        executables) a drifting stream can induce."""
+        cur = self._density.get(bucket_key)
+        if cur is None:
+            return None
+        out = []
+        for p in cur:
+            if p is None:
+                out.append(None)
+                continue
+            q = np.round(p / _DENSITY_QUANTUM) * _DENSITY_QUANTUM
+            out.append(tuple(float(x) for x in q))
+        return tuple(out)
 
     # -- read side ----------------------------------------------------------
 
@@ -101,6 +154,7 @@ class ServiceMetrics:
             "cache_hits": hits,
             "cache_misses": misses,
             "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
+            "density_tracked_buckets": len(self._density),
             "flush_triggers": {
                 t: self._triggers.get(t, 0)
                 for t in ("max_batch", "max_wait", "aging", "forced")

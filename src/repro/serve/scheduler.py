@@ -38,11 +38,18 @@ import threading
 import time
 from typing import Callable
 
+import numpy as np
+
+from ..core import plan as plan_mod
 from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
 from .batched_engine import BatchedEngine, batched_cache_stats
 from .buckets import Bucket, BucketPolicy
 from .metrics import BatchEvent, ServiceMetrics
+
+# Modes with more rows than this keep the uniform planning prior instead
+# of paying per-flush bincount+sort profiling on the caller's thread.
+_DENSITY_MAX_ROWS = 65536
 
 
 class DecompositionFuture:
@@ -93,6 +100,7 @@ class _Pending:
     tol: float
     seed: int
     t_submit: float
+    init_state: tuple | None = None
 
 
 class BatchScheduler:
@@ -118,14 +126,19 @@ class BatchScheduler:
     # -- request side -------------------------------------------------------
 
     def submit(self, tensor: SparseTensor, *, n_iters: int = 25,
-               tol: float = 1e-5, seed: int = 0) -> DecompositionFuture:
-        bucket = self.policy.bucket_for(tensor)
+               tol: float = 1e-5, seed: int = 0, method: str = "cp",
+               init_state: tuple | None = None) -> DecompositionFuture:
+        """Enqueue one request.  ``method`` routes to the decomposition
+        method's (shape, nnz-bucket, method) class — a mixed-method
+        stream batches per method but shares plans and kernels.
+        ``init_state`` warm-starts this request (streaming sessions)."""
+        bucket = self.policy.bucket_for(tensor, method)
         now = self.clock()
         with self._lock:
             fut = DecompositionFuture(self, bucket)
             self._queues.setdefault(bucket, []).append(
                 _Pending(tensor, fut, int(n_iters), float(tol), int(seed),
-                         now))
+                         now, init_state))
             self.metrics.record_submit(now)
             work = self._pop_ready()
         self._run_batches(work)
@@ -211,6 +224,12 @@ class BatchScheduler:
         # thread's compile can land inside this window, so per-batch
         # attribution is best-effort (totals stay exact).
         stats0 = batched_cache_stats()
+        # Density feedback: the PREVIOUS flushes' observed row-density
+        # EWMA prices this batch's bucket plan; this batch's own profile
+        # is folded in afterwards for the next one (so the first flush of
+        # a bucket runs under the uniform prior — by construction there
+        # is nothing observed yet).
+        density = self.metrics.row_density(bucket.key)
         t0 = time.perf_counter()
         try:
             results = self.engine.decompose_batch(
@@ -219,6 +238,9 @@ class BatchScheduler:
                 tol=[p.tol for p in batch],
                 seeds=[p.seed for p in batch],
                 nnz_cap=bucket.nnz_cap,
+                method=bucket.method,
+                init_states=[p.init_state for p in batch],
+                density=density,
             )
         except BaseException as exc:
             # Executor semantics: the failure belongs to the batch's own
@@ -234,10 +256,24 @@ class BatchScheduler:
         stats1 = batched_cache_stats()
         for p, res in zip(batch, results):
             p.future._resolve(res)
+        # Per-mode observed row-density of this batch (unpadded tensors),
+        # averaged across the batch, folded into the bucket's EWMA.  Modes
+        # too large to profile cheaply (bincount+sort is O(I_d log I_d)
+        # host work on the flushing caller's thread) are skipped — a None
+        # profile keeps the uniform prior for that mode only.
+        shape = bucket.shape
+        profiles = tuple(
+            (None if shape[d] > _DENSITY_MAX_ROWS else
+             tuple(float(np.mean(col)) for col in zip(*[
+                 plan_mod.density_profile(p.tensor.indices, shape, d)
+                 for p in batch])))
+            for d in range(len(shape))
+        )
         with self._lock:
+            self.metrics.record_density(bucket.key, profiles)
             self.metrics.record_batch(
                 BatchEvent(
-                    bucket_key=(bucket.shape, bucket.nnz_cap),
+                    bucket_key=bucket.key,
                     batch_size=len(batch),
                     max_batch=self.max_batch,
                     real_nnz=sum(p.tensor.nnz for p in batch),

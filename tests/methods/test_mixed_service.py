@@ -1,0 +1,144 @@
+"""Mixed-method serving: a stream of {cp, nncp, masked} requests batches
+into method-keyed buckets and every result matches its sequential
+single-tensor counterpart to fp32 tolerance — plus the row-density
+feedback loop from serve.metrics into core.plan."""
+import numpy as np
+
+from repro.core import SparseTensor, cpd_als_fused, random_sparse
+from repro.core import plan as plan_mod
+from repro.serve import DecompositionService, ServiceMetrics
+
+
+def _stream(shape, nnz, n=2):
+    ts = [random_sparse(shape, nnz - 13 * i, seed=i,
+                        distribution="powerlaw") for i in range(n)]
+    pos = [SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+           for t in ts]
+    return ts, pos
+
+
+def test_mixed_stream_batches_per_method_and_matches_sequential():
+    shape, nnz, R = (16, 12, 9), 380, 3
+    ts, pos = _stream(shape, nnz)
+    svc = DecompositionService(rank=R, kappa=2, max_batch=4, max_wait_s=60.0)
+
+    futs = []
+    for i, t in enumerate(ts):
+        futs.append((svc.submit(t, n_iters=3, tol=-1.0, seed=i), "cp", t, i))
+        futs.append((svc.submit(t, n_iters=3, tol=-1.0, seed=i,
+                                method="masked"), "masked", t, i))
+    for i, t in enumerate(pos):
+        futs.append((svc.submit(t, n_iters=3, tol=-1.0, seed=i,
+                                method="nncp"), "nncp", t, i))
+    # Nothing flushed yet (long max_wait, under max_batch per bucket):
+    # the three method classes queue independently.
+    buckets = {f[0]._bucket for f in futs}
+    assert {b.method for b in buckets} == {"cp", "masked", "nncp"}
+    svc.drain()
+
+    for fut, method, t, i in futs:
+        res = fut.result()
+        assert res.engine == "batched"
+        ref = cpd_als_fused(t, R, kappa=2, n_iters=3, tol=-1.0, seed=i,
+                            backend="segment", check_every=4, method=method)
+        np.testing.assert_allclose(res.fits, ref.fits, rtol=1e-4, atol=1e-4)
+        for Fb, Fr in zip(res.factors, ref.factors):
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-4, atol=1e-4)
+
+    snap = svc.snapshot()
+    assert snap["completed"] == len(futs)
+    # One bucket class per (nnz-cap, method) combination was tracked.
+    assert snap["density_tracked_buckets"] == len(buckets)
+
+
+def test_methods_share_one_bucket_plan():
+    """Different methods of one (shape, nnz_cap) class reuse the SAME
+    cached PartitionPlan — the methods layer rides the planning layer,
+    it does not fork it."""
+    svc = DecompositionService(rank=3, kappa=2, max_batch=2,
+                               max_wait_s=60.0)
+    p1 = svc.engine.bucket_plan((16, 12, 9), 384)
+    p2 = svc.engine.bucket_plan((16, 12, 9), 384)
+    assert p1 is p2     # lru-cached identity
+
+
+# -- row-density feedback (serve.metrics -> core.plan) ----------------------
+
+
+def test_density_profile_reflects_skew():
+    t_skew = random_sparse((256, 10, 8), 1500, seed=0,
+                           distribution="powerlaw")
+    t_unif = random_sparse((256, 10, 8), 1500, seed=0,
+                           distribution="uniform")
+    p_skew = plan_mod.density_profile(t_skew.indices, t_skew.shape, 0)
+    p_unif = plan_mod.density_profile(t_unif.indices, t_unif.shape, 0)
+    assert abs(sum(p_skew) - 1.0) < 1e-9
+    # powerlaw concentrates mass in the hottest bin beyond uniform
+    assert p_skew[0] > p_unif[0] + 0.05
+    # descending-sorted: monotone nonincreasing bins
+    assert all(a >= b - 1e-12 for a, b in zip(p_skew, p_skew[1:]))
+
+
+def test_metrics_density_ewma_and_quantization():
+    m = ServiceMetrics()
+    key = ((16, 12, 9), 384, "cp")
+    assert m.row_density(key) is None
+    hot = tuple([1.0] + [0.0] * (plan_mod.DENSITY_BINS - 1))
+    flat = tuple([1.0 / plan_mod.DENSITY_BINS] * plan_mod.DENSITY_BINS)
+    m.record_density(key, (hot, flat, flat))
+    d = m.row_density(key)
+    assert d is not None and len(d) == 3
+    assert d[0][0] == 1.0
+    # EWMA moves toward a new observation; quantization keeps the value
+    # on the 1/16 grid (hashable, bounded plan-cache churn).
+    m.record_density(key, (flat, flat, flat))
+    d2 = m.row_density(key)
+    assert d2[0][0] < 1.0
+    for mode_prof in d2:
+        for x in mode_prof:
+            assert abs(x * 16 - round(x * 16)) < 1e-9
+
+
+def test_plan_bucket_accepts_observed_density():
+    """A skewed observed profile changes the cost model's row_ptr (and may
+    change the chosen tiling) but NEVER the validity envelope: slab_cap
+    still bounds any member distribution."""
+    shape, cap, rank = (2048, 24, 16), 4096, 16
+    uniform = plan_mod.plan_bucket(shape, cap, rank, 1)
+    hot = tuple([0.9] + [0.1 / (plan_mod.DENSITY_BINS - 1)]
+                * (plan_mod.DENSITY_BINS - 1))
+    flat = tuple([1.0 / plan_mod.DENSITY_BINS] * plan_mod.DENSITY_BINS)
+    skewed = plan_mod.plan_bucket(shape, cap, rank, 1,
+                                  density=(hot, flat, flat))
+    for mp_u, mp_s in zip(uniform.modes, skewed.modes):
+        # the cap formula is a pure function of the chosen tiling
+        assert mp_s.slab_cap == plan_mod.slab_cap(
+            mp_s.num_rows, cap, mp_s.block_rows, mp_s.tile)
+        assert mp_u.nnz_cap == mp_s.nnz_cap == cap
+    # same inputs -> same cached plan object (density part of the key)
+    again = plan_mod.plan_bucket(shape, cap, rank, 1,
+                                 density=(hot, flat, flat))
+    assert again is skewed and skewed is not uniform
+
+
+def test_scheduler_threads_density_into_engine(monkeypatch):
+    """After the first flush of a bucket, subsequent flushes pass the
+    observed (EWMA, quantized) density into the engine's bucket plan."""
+    svc = DecompositionService(rank=3, kappa=2, max_batch=2,
+                               max_wait_s=60.0)
+    seen = []
+    orig = svc.engine.decompose_batch
+
+    def spy(tensors, **kw):
+        seen.append(kw.get("density"))
+        return orig(tensors, **kw)
+
+    monkeypatch.setattr(svc.engine, "decompose_batch", spy)
+    t = random_sparse((16, 12, 9), 380, seed=0, distribution="powerlaw")
+    svc.submit(t, n_iters=2, tol=-1.0).result()
+    svc.submit(t, n_iters=2, tol=-1.0).result()
+    assert len(seen) == 2
+    assert seen[0] is None                  # nothing observed yet
+    assert seen[1] is not None              # fed back from flush #1
+    assert len(seen[1]) == 3                # one profile per mode
+    assert all(len(p) == plan_mod.DENSITY_BINS for p in seen[1])

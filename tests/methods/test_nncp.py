@@ -1,0 +1,78 @@
+"""Nonnegative CP (HALS) properties: factors provably >= 0 and fit
+monotone nondecreasing per window — the method's two contracts — plus
+equivalence between the sequential and batched front doors."""
+import numpy as np
+import pytest
+
+from repro.core import SparseTensor, cpd_als, cpd_als_fused, random_sparse
+from repro.serve import BatchedEngine
+
+# Window-boundary float noise allowance for the monotonicity assertion
+# (each HALS column update is an exact nonneg minimization in exact
+# arithmetic; f32 accumulation can wobble in the last few ulps).
+_MONO_SLACK = 1e-5
+
+
+def _nonneg_tensor(shape, nnz, seed):
+    t = random_sparse(shape, nnz, seed=seed, distribution="powerlaw")
+    return SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("backend", ["segment", "coo"])
+def test_factors_nonnegative_and_fit_monotone(seed, backend):
+    t = _nonneg_tensor((16, 12, 9), 380, seed)
+    res = cpd_als(t, 4, n_iters=8, tol=-1.0, check_every=2, seed=seed,
+                  backend=backend, method="nncp")
+    for F in res.factors:
+        assert (F >= 0.0).all(), "HALS produced a negative factor entry"
+    assert (res.weights >= 0.0).all()
+    for a, b in zip(res.fits, res.fits[1:]):
+        assert b >= a - _MONO_SLACK, (a, b)
+
+
+def test_pallas_backend_nonneg_and_matches_segment():
+    t = _nonneg_tensor((16, 12, 9), 380, 5)
+    seg = cpd_als(t, 4, n_iters=4, tol=-1.0, check_every=2, method="nncp")
+    pal = cpd_als(t, 4, n_iters=4, tol=-1.0, check_every=2, method="nncp",
+                  backend="pallas")
+    for F in pal.factors:
+        assert (F >= 0.0).all()
+    np.testing.assert_allclose(pal.fits, seg.fits, rtol=1e-5, atol=1e-5)
+
+
+def test_monotone_on_four_mode_tensor():
+    t = _nonneg_tensor((9, 8, 7, 6), 320, 7)
+    res = cpd_als(t, 3, n_iters=6, tol=-1.0, check_every=3, method="nncp")
+    for a, b in zip(res.fits, res.fits[1:]):
+        assert b >= a - _MONO_SLACK
+    for F in res.factors:
+        assert (F >= 0.0).all()
+
+
+def test_batched_nncp_matches_sequential():
+    """One vmapped dispatch over B nonneg decompositions == B sequential
+    fused nncp runs (same seeds) to fp32 tolerance, and every batched
+    factor stays nonnegative."""
+    ts = [_nonneg_tensor((16, 12, 9), 380 - 13 * i, 10 + i)
+          for i in range(3)]
+    eng = BatchedEngine(rank=4, kappa=2, backend="segment", check_every=2)
+    batch = eng.decompose_batch(ts, n_iters=4, tol=-1.0, seeds=[4, 5, 6],
+                                nnz_cap=384, method="nncp")
+    for i, t in enumerate(ts):
+        ref = cpd_als_fused(t, 4, kappa=2, n_iters=4, tol=-1.0, seed=4 + i,
+                            backend="segment", check_every=2, method="nncp")
+        np.testing.assert_allclose(batch[i].fits, ref.fits,
+                                   rtol=1e-5, atol=1e-5)
+        for Fb, Fr in zip(batch[i].factors, ref.factors):
+            assert (Fb >= 0.0).all()
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-4, atol=1e-4)
+
+
+def test_nonneg_init_is_nonneg():
+    from repro.methods.nncp import init_state_host_nonneg
+
+    factors, grams, weights = init_state_host_nonneg((11, 7, 5), 4, 3)
+    for F in factors:
+        assert (F > 0.0).all()
+    assert (weights == 1.0).all()

@@ -1,0 +1,69 @@
+"""Method registry: catalogue contents, routing errors, bucket keying."""
+import pytest
+
+from repro.methods import (MethodSpec, batchable_methods, get_method,
+                           list_methods, register_method)
+from repro.serve import BucketPolicy
+
+
+def test_builtin_methods_registered():
+    names = list_methods()
+    for m in ("cp", "nncp", "masked", "streaming"):
+        assert m in names
+
+
+def test_batchable_excludes_stateful():
+    bat = batchable_methods()
+    assert "streaming" not in bat
+    assert {"cp", "nncp", "masked"} <= set(bat)
+
+
+def test_unknown_method_lists_options():
+    with pytest.raises(KeyError, match="registered"):
+        get_method("definitely-not-a-method")
+
+
+def test_double_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        register_method(MethodSpec(name="cp"))
+
+
+def test_masked_spec_contract():
+    spec = get_method("masked")
+    assert spec.valued_mode_data and spec.weighted_fit
+    assert spec.build_sweep is not None
+
+
+def test_streaming_spec_is_stateful():
+    spec = get_method("streaming")
+    assert spec.stateful and spec.session_factory is not None
+    assert spec.build_sweep is None
+
+
+def test_buckets_key_on_method(rng):
+    from repro.core import random_sparse
+
+    policy = BucketPolicy()
+    t = random_sparse((10, 8, 6), 200, seed=0)
+    b_cp = policy.bucket_for(t)
+    b_nn = policy.bucket_for(t, "nncp")
+    assert b_cp != b_nn
+    assert b_cp.shape == b_nn.shape and b_cp.nnz_cap == b_nn.nnz_cap
+    assert b_cp.method == "cp" and b_nn.method == "nncp"
+    assert b_nn.key == (b_nn.shape, b_nn.nnz_cap, "nncp")
+
+
+def test_stateful_method_rejected_by_sweep_path():
+    from repro.core import cpd_als, random_sparse
+
+    t = random_sparse((10, 8, 6), 150, seed=0)
+    with pytest.raises(ValueError, match="stateful"):
+        cpd_als(t, 3, method="streaming", n_iters=2)
+
+
+def test_host_engine_rejects_methods():
+    from repro.core import cpd_als, random_sparse
+
+    t = random_sparse((10, 8, 6), 150, seed=0)
+    with pytest.raises(ValueError, match="fused"):
+        cpd_als(t, 3, method="nncp", engine="host", n_iters=2)

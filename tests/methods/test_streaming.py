@@ -1,0 +1,127 @@
+"""Streaming CP: k warm-started increments match a batch refit to fp32
+tolerance, sessions are restartable/routable, and the inner method is
+pluggable."""
+import numpy as np
+import pytest
+
+from repro.core import SparseTensor, cpd_als, random_sparse
+from repro.methods import StreamingCP
+from repro.runtime import ALSRunner
+
+
+def _dense_low_rank(shape, rank, seed):
+    rng = np.random.default_rng(seed)
+    factors = [rng.standard_normal((I, rank)).astype(np.float32)
+               for I in shape]
+    full = np.einsum("ir,jr,kr->ijk", *factors)
+    coords = np.indices(shape).reshape(len(shape), -1).T.astype(np.int32)
+    return coords, full.reshape(-1).astype(np.float32)
+
+
+def test_streaming_matches_batch_refit():
+    """After k increments the streamed decomposition matches a converged
+    cold batch refit of the same union tensor to fp32 tolerance (fit and
+    reconstruction at the observed coordinates — the factor-permutation-
+    invariant comparison).  Seeds are pinned to convergent inits for both
+    paths (CP-ALS swamps are a property of the problem, not the
+    streaming machinery)."""
+    shape, R = (12, 10, 8), 3
+    coords, vals = _dense_low_rank(shape, R, seed=5)
+    rng = np.random.default_rng(9)
+    chunks = np.array_split(rng.permutation(len(coords)), 4)
+    t_full = SparseTensor(coords, vals, shape)
+
+    s = StreamingCP(R, refine_iters=8, check_every=4)
+    s.start(SparseTensor(coords[chunks[0]], vals[chunks[0]], shape),
+            n_iters=24, tol=-1.0, seed=2)
+    for i, c in enumerate(chunks[1:]):
+        # a slightly larger budget on the LAST fold (the union tensor is
+        # final there) polishes to the refit's converged fit
+        s.update(SparseTensor(coords[c], vals[c], shape),
+                 refine_iters=16 if i == len(chunks) - 2 else None)
+    assert s.increments == 3
+    assert s.tensor.nnz == len(coords)
+
+    ref = cpd_als(t_full, R, n_iters=48, tol=-1.0, check_every=4, seed=2)
+    assert abs(s.fit - ref.fits[-1]) < 1e-4, (s.fit, ref.fits[-1])
+    rec_s = s.result.reconstruct_at(coords)
+    rec_b = ref.reconstruct_at(coords)
+    for rec in (rec_s, rec_b):
+        rel = np.linalg.norm(rec - vals) / np.linalg.norm(vals)
+        assert rel < 1e-3, rel
+    np.testing.assert_allclose(rec_s, rec_b, rtol=0, atol=1e-3)
+
+
+def test_increment_is_cheaper_than_refit():
+    """The per-increment iteration budget is refine_iters, not a full
+    refit's n_iters — the entire point of the fold."""
+    shape = (12, 10, 8)
+    t = random_sparse(shape, 500, seed=1, distribution="powerlaw")
+    s = StreamingCP(3, refine_iters=2, check_every=2)
+    s.start(SparseTensor(t.indices[:300], t.values[:300], shape),
+            n_iters=10, tol=-1.0)
+    res = s.update(SparseTensor(t.indices[300:], t.values[300:], shape))
+    assert res.iters == 2
+
+
+def test_duplicate_coordinates_accumulate():
+    """Streaming an increment that revisits existing coordinates ADDS
+    values (the accumulation semantics of COO streams)."""
+    shape = (8, 6, 5)
+    t = random_sparse(shape, 100, seed=3)
+    s = StreamingCP(2, refine_iters=1, check_every=1)
+    s.start(t, n_iters=2, tol=-1.0)
+    s.update(t)      # same coords again -> values double, nnz unchanged
+    assert s.tensor.nnz == t.nnz
+    np.testing.assert_allclose(
+        np.sort(s.tensor.values), np.sort(2.0 * t.values), rtol=1e-6)
+
+
+def test_streaming_through_runner_batched_service():
+    """open_stream routes cold fit and warm refinements through the
+    bucketed batched service; the warm state threads via init_state."""
+    shape = (14, 10, 8)
+    t = random_sparse(shape, 420, seed=4, distribution="powerlaw")
+    runner = ALSRunner(3, kappa=2, check_every=2)
+    assert runner.mode == "batched"
+    s = runner.open_stream(refine_iters=3)
+    s.start(SparseTensor(t.indices[:250], t.values[:250], shape),
+            n_iters=6, tol=-1.0)
+    fit0 = s.fit
+    res = s.update(SparseTensor(t.indices[250:], t.values[250:], shape))
+    assert res.engine == "batched"
+    assert res.iters == 3
+    assert len(runner.history) == 2         # cold fit + one refinement
+    assert np.isfinite(fit0) and np.isfinite(s.fit)
+
+
+def test_streaming_nonnegative_inner_method():
+    """A streamed nonnegative decomposition stays nonnegative across
+    increments (warm HALS preserves the invariant)."""
+    shape = (10, 8, 6)
+    t = random_sparse(shape, 300, seed=6)
+    t = SparseTensor(t.indices, np.abs(t.values) + 0.1, shape)
+    s = StreamingCP(3, method="nncp", refine_iters=3, check_every=1)
+    s.start(SparseTensor(t.indices[:150], t.values[:150], shape),
+            n_iters=5, tol=-1.0)
+    s.update(SparseTensor(t.indices[150:], t.values[150:], shape))
+    for F in s.result.factors:
+        assert (F >= 0.0).all()
+
+
+def test_update_before_start_raises():
+    s = StreamingCP(3)
+    with pytest.raises(RuntimeError, match="start"):
+        s.update(random_sparse((5, 4, 3), 20, seed=0))
+
+
+def test_shape_mismatch_raises():
+    s = StreamingCP(3)
+    s.start(random_sparse((5, 4, 3), 20, seed=0), n_iters=1, tol=-1.0)
+    with pytest.raises(ValueError, match="shape"):
+        s.update(random_sparse((5, 4, 4), 20, seed=0))
+
+
+def test_streaming_wrapping_stateful_method_rejected():
+    with pytest.raises(ValueError, match="sweep-based"):
+        StreamingCP(3, method="streaming")

@@ -12,7 +12,11 @@ parses its CSV back out.  Measured per Table-3-style tensor:
   * host syncs per iteration for the distributed engine — asserted <= 1
     per ``check_every`` window (+1 final), i.e. zero per-iteration syncs
     inside a window;
-  * the fp32 agreement of the final fit with the single-device engine.
+  * the fp32 agreement of the final fit with the single-device engine;
+  * a masked/weighted completion row (``method="masked"`` with
+    fractional observation confidences): per-shard residual scatter,
+    psum of partial valued MTTKRPs, weighted sharded fit — the
+    distributed path of the weighted-observations front door.
 
 Output: ``name,us_per_call,derived`` CSV like the other sections.
 """
@@ -61,6 +65,26 @@ _CHILD = """
               f"fit={dist.fits[-1]:.4f};"
               f"syncs_per_iter={dist.host_syncs / ITERS:.2f};"
               f"schemes={schemes}")
+
+    # Masked/weighted completion under shard_map: per-shard residual
+    # scatter + psum of partial valued MTTKRPs, weighted sharded fit.
+    t = random_sparse((48, 32, 6), 1500, seed=7, distribution="powerlaw")
+    w = np.random.default_rng(1).uniform(0.25, 1.0, t.nnz).astype(np.float32)
+    single = cpd_als(t, rank=8, n_iters=ITERS, tol=-1.0, check_every=CHECK,
+                     method="masked", weights=w)
+    mplan = make_distributed_plan(t, method="masked", weights=w)
+    cpd_als_distributed(t, rank=8, plan=mplan, n_iters=CHECK, tol=-1.0,
+                        check_every=CHECK, method="masked")
+    t0 = time.perf_counter()
+    dist = cpd_als_distributed(t, rank=8, plan=mplan, n_iters=ITERS,
+                               tol=-1.0, check_every=CHECK, method="masked")
+    dist_s = time.perf_counter() - t0
+    assert dist.host_syncs <= ITERS // CHECK + 1, dist.host_syncs
+    assert abs(dist.fits[-1] - single.fits[-1]) < 1e-3, (
+        dist.fits[-1], single.fits[-1])
+    print(f"dist/masked-weighted/shard_map-8dev,{dist_s / ITERS * 1e6:.0f},"
+          f"fit={dist.fits[-1]:.4f};single_fit={single.fits[-1]:.4f};"
+          f"syncs_per_iter={dist.host_syncs / ITERS:.2f}")
 """
 
 

@@ -162,12 +162,32 @@ def _build_valued_mttkrp(backend: str, nmodes: int, shapes: tuple[int, ...],
       pallas:  (rb_of, first, idx_packed, lrows_packed,
                 row_perm, perm, val_scatter)           scatter into the slabs
       coo:     (indices,)                              canonical order already
+
+    With ``axis`` (the distributed shard_map path, segment backend only)
+    the contract changes: mode data is the device-local structural shard
+    ``(idx, rows, row_perm)`` and ``vals`` arrives in LAYOUT-SHARD order
+    (each device evaluates its residual at its own shard's coordinates —
+    see ``methods.masked``), so no canonical->layout permutation exists;
+    the partial outputs are ``psum``-combined over the axis.
     """
-    if axis is not None:
-        raise NotImplementedError(
-            "valued MTTKRP is not wired into the distributed path yet")
     in_modes = [tuple(w for w in range(nmodes) if w != d)
                 for d in range(nmodes)]
+
+    if axis is not None:
+        if backend != "segment":
+            raise NotImplementedError(
+                "the distributed valued MTTKRP runs on the segment backend "
+                f"(shard_map path), got {backend!r}")
+
+        def mttkrp_valued_dist(d, mode_data, factors, vals):
+            idx, rows, row_perm = mode_data
+            out = kref.mttkrp_sorted_segments(
+                idx, rows, vals, [factors[w] for w in in_modes[d]], shapes[d]
+            )
+            out = lax.psum(out, axis)
+            return jnp.zeros_like(out).at[row_perm].set(out)
+
+        return mttkrp_valued_dist
 
     def mttkrp_valued(d, mode_data, factors, vals):
         if backend == "segment":
@@ -273,6 +293,60 @@ def _build_sparse_fit(nmodes: int, rank: int, axis: str | None):
     return sparse_fit
 
 
+def _build_weighted_fit(nmodes: int, rank: int, axis: str | None):
+    """Observed-only weighted fit shared by the masked method across every
+    execution path:  ``1 - sqrt(sum_e w_e (x_e - model_e)^2) /
+    sqrt(sum_e w_e x_e^2)``.  ``fit_data = (indices, values,
+    entry_weights, weighted_norm_sq)``; weight-0 entries (nnz padding, or
+    entries the caller masked out) contribute exactly +0.0.  Under
+    ``axis`` the nnz are device shards and the residual mass psums."""
+
+    def weighted_fit(factors, weights, fit_data):
+        indices, values, ew, norm_x_sq = fit_data
+        acc = jnp.ones((values.shape[0], rank), jnp.float32)
+        for d in range(nmodes):
+            acc = acc * factors[d][indices[:, d]]
+        resid = values - acc @ weights
+        resid_sq = jnp.sum(ew * resid * resid)
+        if axis is not None:
+            resid_sq = lax.psum(resid_sq, axis)
+        return 1.0 - jnp.sqrt(resid_sq) / jnp.maximum(
+            jnp.sqrt(norm_x_sq), 1e-12)
+
+    return weighted_fit
+
+
+def validate_entry_weights(nnz: int, weights) -> np.ndarray:
+    """Normalize a front-door per-entry weight vector: (nnz,) f32,
+    finite, nonnegative.  Shared by every front door (sequential fused,
+    batched service, distributed) so they can never disagree on what a
+    legal weight vector is."""
+    w = np.asarray(weights, dtype=np.float32).reshape(-1)
+    if w.shape[0] != nnz:
+        raise ValueError(
+            f"entry weights must align with the nnz list: got {w.shape[0]} "
+            f"weights for {nnz} nonzeros")
+    if not np.all(np.isfinite(w)):
+        raise ValueError("entry weights must be finite")
+    if w.size and float(w.min()) < 0.0:
+        raise ValueError("entry weights must be nonnegative")
+    return w
+
+
+def normalize_entry_weights(w: np.ndarray) -> np.ndarray:
+    """EM stability normalization, applied by every weighted front door
+    (sequential, batched, distributed — so they can never disagree): the
+    masked method's filled-tensor update is a majorizer only for weights
+    in [0, 1], while the weighted objective — argmin AND reported fit —
+    is invariant under positive rescaling of the whole vector.  Dividing
+    by ``max(1, w.max())`` therefore changes nothing the caller can
+    observe except that the iteration is guaranteed stable.  Vectors
+    already in [0, 1] pass through untouched (bit-exactly), and the map
+    is idempotent."""
+    m = float(w.max()) if w.size else 0.0
+    return (w / np.float32(m)).astype(np.float32) if m > 1.0 else w
+
+
 @dataclasses.dataclass(frozen=True)
 class SweepContext:
     """Everything a decomposition method needs to build its sweep on the
@@ -294,6 +368,7 @@ class SweepContext:
     solve: Callable           # (M, V) -> Yd  (ridge + pinv rescue)
     normalize: Callable       # (Yd) -> (Yd, lam)  (dead-column guard)
     sparse_fit: Callable      # (factors, grams, weights, fit_data) -> fit
+    weighted_fit: Callable    # (factors, weights, fit_data4) -> fit
     hadamard: Callable        # (grams, exclude=None) -> (R, R)
 
 
@@ -351,13 +426,14 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
         mttkrp_valued = (
             _build_valued_mttkrp(backend, nmodes, shapes, pallas_meta,
                                  interpret, axis)
-            if axis is None else None)
+            if (axis is None or backend == "segment") else None)
         ctx = SweepContext(
             backend=backend, nmodes=nmodes, rank=rank, shapes=shapes,
             solver=solver, fallback=fallback, axis=axis,
             one_mttkrp=one_mttkrp, mttkrp_valued=mttkrp_valued,
             solve=solve, normalize=normalize_columns,
             sparse_fit=sparse_fit,
+            weighted_fit=_build_weighted_fit(nmodes, rank, axis),
             hadamard=functools.partial(_hadamard_grams, rank=rank),
         )
         return spec.build_sweep(ctx)
@@ -586,6 +662,7 @@ def cpd_als_fused(
     solver: str = "auto",
     method: str = "cp",
     init_state: tuple | None = None,
+    weights: np.ndarray | None = None,
     profile_mttkrp: bool = False,
     verbose: bool = False,
 ) -> CPDResult:
@@ -600,6 +677,11 @@ def cpd_als_fused(
     ``init_state`` (a host state tuple, e.g. from ``state_from_factors``)
     warm-starts from existing factors instead of the seeded random init —
     the streaming method's incremental-fold entry.
+    ``weights`` — per-entry observation weights in canonical COO order
+    (fractional confidences; weight 0 = treat the entry as unobserved).
+    Only weighted-fit methods ('masked') accept them; they flow into the
+    method's fit data, never into the structural layouts, so weighted and
+    unweighted requests share every packed artifact and executable.
     ``profile_mttkrp=True`` times a jitted MTTKRP-only replay of the same
     windows after the run so ``mttkrp_seconds`` is separable from solve
     time (named_scope annotations additionally mark the stages for real
@@ -611,6 +693,13 @@ def cpd_als_fused(
     N = tensor.nmodes
     check_every = max(1, int(check_every))
     spec = _method_spec(method)
+    if weights is not None:
+        if spec is None or not spec.weighted_fit:
+            raise ValueError(
+                f"per-entry weights require a weighted-fit method "
+                f"(e.g. 'masked'), got method={method!r}")
+        weights = normalize_entry_weights(
+            validate_entry_weights(tensor.nnz, weights))
     if init_state is not None:
         state = _host_state_to_device(init_state)
     elif spec is not None and spec.init_state_host is not None:
@@ -646,7 +735,7 @@ def cpd_als_fused(
             mode_data_all, pallas_meta = _collect_mode_data(
                 plan, backend, rank)
     if spec is not None and spec.make_fit_data is not None:
-        fit_data = spec.make_fit_data(tensor)
+        fit_data = spec.make_fit_data(tensor, weights)
     else:
         norm_x_sq = tensor.norm() ** 2
         fit_data = (
@@ -706,6 +795,7 @@ def cpd_als_fused(
         total_seconds=time.perf_counter() - t_start,
         host_syncs=host_syncs,
         engine="fused",
+        method=method,
     )
 
 

@@ -36,6 +36,7 @@ class CPDResult:
     total_seconds: float
     host_syncs: int = 0           # device->host synchronizations performed
     engine: str = "host"          # which ALS engine produced this result
+    method: str = "cp"            # which decomposition method produced it
 
     def reconstruct_at(self, indices: np.ndarray) -> np.ndarray:
         acc = np.ones((indices.shape[0], len(self.weights)))
@@ -75,6 +76,7 @@ def cpd_als(
     check_every: int = 1,
     method: str = "cp",
     init_state: tuple | None = None,
+    weights: np.ndarray | None = None,
     mttkrp_fn: Callable | None = None,
     verbose: bool = False,
 ) -> CPDResult:
@@ -92,24 +94,28 @@ def cpd_als(
     registry ('cp', 'nncp', 'masked', …) — every method runs on the fused
     engine's shared MTTKRP substrate.  ``init_state`` (see
     ``als_device.state_from_factors``) warm-starts from existing factors
-    (the streaming path)."""
+    (the streaming path).  ``weights`` — per-entry observation weights in
+    canonical COO order for weighted-fit methods ('masked'): fractional
+    confidences, weight 0 = entry treated as unobserved (exactly — a
+    weight-0 entry yields factors bit-identical to omitting it)."""
     if engine not in ("fused", "host"):
         raise ValueError(f"unknown engine {engine!r}")
     # A custom mttkrp_fn forces the host loop (below), which is plain-CP
     # only — refuse rather than silently dropping method/init_state.
     if (engine == "host" or mttkrp_fn is not None) and (
-            method != "cp" or init_state is not None):
+            method != "cp" or init_state is not None or weights is not None):
         raise ValueError(
             "engine='host' (and the custom-mttkrp_fn host loop) supports "
-            "only method='cp' with random init; methods and warm starts "
-            "run on the fused engine")
+            "only method='cp' with random init; methods, warm starts, and "
+            "entry weights run on the fused engine")
     if engine == "fused" and mttkrp_fn is None:
         from .als_device import cpd_als_fused
 
         return cpd_als_fused(
             tensor, rank, plan=plan, kappa=kappa, n_iters=n_iters, tol=tol,
             seed=seed, backend=backend, check_every=check_every,
-            method=method, init_state=init_state, verbose=verbose,
+            method=method, init_state=init_state, weights=weights,
+            verbose=verbose,
         )
     t_start = time.perf_counter()
     rng = np.random.default_rng(seed)

@@ -25,6 +25,19 @@ shard-crossing points — under ``shard_map``, scanning a whole
 ``check_every`` window as ONE dispatch.  The host syncs only at window
 boundaries (the fit scalar), never inside a window: zero per-iteration
 host traffic, matching the single-device fused engine's contract.
+
+Decomposition methods ride the same path (``method=``): value-baked
+sweeps (cp, nncp) reuse the standard 4-array mode shards unchanged,
+while valued/weighted methods (masked completion) get shards that also
+carry full coordinates, values, and per-entry observation weights
+(``core.plan.DeviceShards.idx_full`` / ``.ew``) — each device evaluates
+the per-sweep residual at its own shard's coordinates from the
+replicated factors, the partial residual MTTKRPs psum, the closed-form
+dense correction is replicated-exact (no collective), and the weighted
+fit psums per-shard residual mass.  ``weights=`` threads user-supplied
+fractional observation confidences through the shards, matching the
+sequential and batched front doors to fp32 tolerance (pinned by
+``tests/conformance``).
 """
 from __future__ import annotations
 
@@ -45,7 +58,10 @@ except ImportError:  # older jax keeps shard_map under experimental
 import time
 
 from . import plan as plan_mod
-from .als_device import build_sweep_fn, init_state, resolve_solver
+from .als_device import (_host_state_to_device, _method_spec,
+                         build_sweep_fn, normalize_entry_weights,
+                         resolve_solver, validate_entry_weights)
+from .als_device import init_state as _device_init_state
 from .coo import SparseTensor
 from .cpd import CPDResult
 from .layout import build_mode_layout
@@ -57,12 +73,17 @@ AXIS = "sm"
 @dataclasses.dataclass
 class DistributedPlan:
     """All-modes distributed plan over a 1-D device mesh: one
-    ``core.plan.DeviceShards`` per mode plus sharded fit data."""
+    ``core.plan.DeviceShards`` per mode plus sharded fit data.
+
+    ``method`` is part of the plan identity: valued/weighted methods
+    (masked) shard different arrays (full coordinates + entry weights),
+    so a plan built for one method cannot silently serve another."""
 
     tensor: SparseTensor
     mesh: Mesh
     modes: list[plan_mod.DeviceShards]
-    fit_shards: tuple  # (idx (κ,per,N), vals (κ,per), norm_sq (κ,))
+    fit_shards: tuple  # (idx (κ,per,N), vals (κ,per)[, ew], norm_sq (κ,))
+    method: str = "cp"
 
     @property
     def kappa(self) -> int:
@@ -75,18 +96,43 @@ def make_distributed_plan(
     *,
     scheme: Scheme | None = None,
     assignment: str = "greedy",
+    method: str = "cp",
+    weights: np.ndarray | None = None,
 ) -> DistributedPlan:
+    """Build per-device shards for ``method``.  Value-baked methods get
+    the standard structural shards; valued/weighted ones (masked) get
+    shards carrying full coordinates and per-entry observation weights
+    (``weights=`` — canonical COO order, defaulting to all-ones; padding
+    slots are weight 0, the exact-no-op mechanism)."""
     if mesh is None:
         mesh = Mesh(np.array(jax.devices()), (AXIS,))
+    spec = _method_spec(method)
+    structural = spec is not None and spec.valued_mode_data
+    weighted = spec is not None and spec.weighted_fit
+    if weights is not None:
+        if not weighted:
+            raise ValueError(
+                f"per-entry weights require a weighted-fit method "
+                f"(e.g. 'masked'), got method={method!r}")
+        weights = normalize_entry_weights(
+            validate_entry_weights(tensor.nnz, weights))
+    ew_full = None
+    if weighted:
+        ew_full = (np.ones(tensor.nnz, np.float32) if weights is None
+                   else weights)
     κ = int(mesh.devices.size)
     modes = []
     for d in range(tensor.nmodes):
         lay = build_mode_layout(tensor, d, κ, scheme=scheme,
                                 assignment=assignment)
-        modes.append(plan_mod.build_device_shards(lay))
-    fit = plan_mod.shard_fit_data(tensor, κ)
+        modes.append(plan_mod.build_device_shards(
+            lay,
+            weights=ew_full if structural else None,
+            with_full_indices=structural,
+        ))
+    fit = plan_mod.shard_fit_data(tensor, κ, weights=ew_full)
     return DistributedPlan(tensor=tensor, mesh=mesh, modes=modes,
-                           fit_shards=fit)
+                           fit_shards=fit, method=method)
 
 
 # ---------------------------------------------------------------------------
@@ -139,7 +185,8 @@ def mttkrp_distributed(
 @functools.lru_cache(maxsize=None)
 def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
                             shapes: tuple[int, ...], solver: str,
-                            block: int):
+                            block: int, method: str = "cp",
+                            mode_width: int = 4, fit_width: int = 3):
     """Jitted shard_map of ``block`` consecutive distributed sweeps.
 
     The body squeezes each device's leading shard dim and scans the SAME
@@ -147,17 +194,23 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
     the whole check window is one dispatch, partial MTTKRPs psum inside
     it, and state stays replicated (identical on every device because the
     psummed inputs are identical).  Cached per (mesh, shapes, rank,
-    solver, window) — shard caps live in the array shapes, so same-class
-    tensors reuse the executable."""
+    solver, window, method) — shard caps live in the array shapes, so
+    same-class tensors reuse the executable.
+
+    ``mode_width`` / ``fit_width``: how many sharded arrays each mode /
+    the fit contract contributes — 4/3 for value-baked sweeps (cp, nncp),
+    6/4 for the valued+weighted masked contract (full coordinates and
+    entry weights ride along)."""
     sweep = build_sweep_fn("segment", nmodes, rank, shapes, None, True,
-                           solver, axis=AXIS)
+                           solver, axis=AXIS, method=method)
 
     def body(state, *flat):
         md = tuple(
-            tuple(jnp.squeeze(a, 0) for a in flat[4 * d: 4 * d + 4])
+            tuple(jnp.squeeze(a, 0)
+                  for a in flat[mode_width * d: mode_width * (d + 1)])
             for d in range(nmodes)
         )
-        fd = tuple(jnp.squeeze(a, 0) for a in flat[4 * nmodes:])
+        fd = tuple(jnp.squeeze(a, 0) for a in flat[mode_width * nmodes:])
 
         def step(st, _):
             return sweep(st, md, fd)
@@ -165,7 +218,7 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
         state, fits = lax.scan(step, state, xs=None, length=block)
         return state, fits
 
-    n_sharded = 4 * nmodes + 3
+    n_sharded = mode_width * nmodes + fit_width
     fn = shard_map(
         body, mesh=mesh_,
         in_specs=(P(),) + tuple(P(AXIS) for _ in range(n_sharded)),
@@ -176,11 +229,19 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
 
 
 def _collect_dist_data(plan: DistributedPlan):
-    """Flat per-mode + fit device arrays in the order the body expects."""
+    """Flat per-mode + fit device arrays in the order the sweep expects:
+    ``(idx, rows, vals, row_perm)`` per mode for value-baked sweeps,
+    ``(idx, rows, row_perm, idx_full, vals, ew)`` for the valued/weighted
+    masked contract (see ``methods.masked``)."""
     flat = []
     for m in plan.modes:
-        flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
-                 jnp.asarray(m.vals), jnp.asarray(m.row_perm)]
+        if m.idx_full is not None:
+            flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
+                     jnp.asarray(m.row_perm), jnp.asarray(m.idx_full),
+                     jnp.asarray(m.vals), jnp.asarray(m.ew)]
+        else:
+            flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
+                     jnp.asarray(m.vals), jnp.asarray(m.row_perm)]
     flat += [jnp.asarray(a) for a in plan.fit_shards]
     return flat
 
@@ -196,29 +257,60 @@ def cpd_als_distributed(
     seed: int = 0,
     check_every: int = 1,
     solver: str = "auto",
+    method: str = "cp",
+    weights: np.ndarray | None = None,
+    init_state: tuple | None = None,
     verbose: bool = False,
 ) -> CPDResult:
     """Distributed CPD-ALS: the fused one-dispatch-per-window sweep under
     shard_map.  Same init and update order as single-device ``cpd_als``
     (identical seed ⇒ matching factors to fp32 tolerance); the host
     fetches only the window-boundary fit scalar — zero per-iteration
-    syncs inside a check window."""
+    syncs inside a check window.
+
+    ``method`` selects the decomposition method (sweep-based methods
+    only: cp, nncp, masked); ``weights`` threads per-entry observation
+    confidences through the shards for weighted-fit methods; and
+    ``init_state`` warm-starts from existing factors — the same contracts
+    as the sequential and batched front doors, so the three agree to fp32
+    tolerance (``tests/conformance``)."""
     t_start = time.perf_counter()
+    spec = _method_spec(method)
     if plan is None:
-        plan = make_distributed_plan(tensor, mesh)
+        plan = make_distributed_plan(tensor, mesh, method=method,
+                                     weights=weights)
+    elif plan.method != method:
+        raise ValueError(
+            f"distributed plan was built for method {plan.method!r}, "
+            f"got method={method!r}; rebuild with make_distributed_plan")
+    elif weights is not None:
+        raise ValueError(
+            "pass weights to make_distributed_plan (they are sharded into "
+            "the plan); a prebuilt plan already carries its weights")
     N = tensor.nmodes
     shapes = tuple(int(s) for s in tensor.shape)
     check_every = max(1, int(check_every))
     solver = resolve_solver(solver)
 
-    state = init_state(tensor.shape, rank, seed)
+    if init_state is not None:
+        state = _host_state_to_device(init_state)
+    elif spec is not None and spec.init_state_host is not None:
+        state = _host_state_to_device(
+            spec.init_state_host(tensor.shape, rank, seed))
+    else:
+        # (init_state the *parameter* shadows the module-level helper.)
+        state = _device_init_state(tensor.shape, rank, seed)
     flat = _collect_dist_data(plan)
+    mode_width = 6 if plan.modes[0].idx_full is not None else 4
+    fit_width = len(plan.fit_shards)
 
     n_blocks, rem = divmod(n_iters, check_every)
     fn_k = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
-                                   check_every) if n_blocks else None
+                                   check_every, method, mode_width,
+                                   fit_width) if n_blocks else None
     fn_rem = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
-                                     rem) if rem else None
+                                     rem, method, mode_width,
+                                     fit_width) if rem else None
 
     fits_dev: list = []
     host_syncs = 0
@@ -249,4 +341,5 @@ def cpd_als_distributed(
         total_seconds=time.perf_counter() - t_start,
         host_syncs=host_syncs,
         engine="distributed",
+        method=method,
     )

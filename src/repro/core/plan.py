@@ -340,15 +340,31 @@ class DeviceShards:
     vals: np.ndarray           # (kappa, nnz_per_dev) f32 (0 on padding)
     row_perm: np.ndarray       # (kappa, I_d) int32 (replicated copies)
     input_modes: tuple[int, ...]
+    # Valued/weighted shards (the distributed masked path): the FULL
+    # canonical coordinates of each shard entry — so a device can evaluate
+    # the CP model (and hence the per-sweep residual) locally at its own
+    # shard's coordinates from the replicated factors — plus per-entry
+    # observation weights.  Padding entries carry weight 0, so they
+    # contribute exactly +0.0 to the residual MTTKRP whatever coordinate
+    # they alias (the general weight-0 mechanism).  None for value-baked
+    # methods, which need neither.
+    idx_full: np.ndarray | None = None   # (kappa, nnz_per_dev, N) int32
+    ew: np.ndarray | None = None         # (kappa, nnz_per_dev) f32
 
 
-def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM
-                        ) -> DeviceShards:
+def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM,
+                        weights: np.ndarray | None = None,
+                        with_full_indices: bool = False) -> DeviceShards:
     """Slice a mode layout into kappa rectangular device shards.
 
     The per-device nnz cap is the max partition load rounded up to
     ``quantum`` — a static shape, so same-class tensors reuse the same
-    shard_map executable."""
+    shard_map executable.
+
+    ``weights`` (canonical COO order) / ``with_full_indices`` populate the
+    valued-shard fields consumed by the distributed masked path: each
+    device then carries its entries' observation weights (0 on padding)
+    and full coordinates alongside the structural arrays."""
     kappa = layout.kappa
     in_modes = layout.input_modes()
     off = layout.part_offsets
@@ -360,12 +376,21 @@ def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM
     # Padding rows sit at I_d - 1 (>= every real row in the slice), keeping
     # each shard sorted so the segmented reduction's sortedness hint holds.
     rows = np.full((kappa, cap), layout.num_rows - 1, np.int32)
+    idx_full = (np.zeros((kappa, cap, layout.nmodes), np.int32)
+                if with_full_indices else None)
+    ew = np.zeros((kappa, cap), np.float32) if weights is not None else None
+    w_lay = (np.asarray(weights, np.float32)[layout.perm]
+             if weights is not None else None)
     for p in range(kappa):
         s, e = int(off[p]), int(off[p + 1])
         n = e - s
         idx[p, :n] = layout.indices[s:e][:, in_modes]
         vals[p, :n] = layout.values[s:e]
         rows[p, :n] = layout.rows[s:e]
+        if idx_full is not None:
+            idx_full[p, :n] = layout.indices[s:e]
+        if ew is not None:
+            ew[p, :n] = w_lay[s:e]
     row_perm = np.broadcast_to(
         layout.row_perm, (kappa,) + layout.row_perm.shape).copy()
     return DeviceShards(
@@ -378,24 +403,42 @@ def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM
         vals=vals,
         row_perm=row_perm,
         input_modes=tuple(in_modes),
+        idx_full=idx_full,
+        ew=ew,
     )
 
 
 def shard_fit_data(tensor, kappa: int, *,
-                   quantum: int = DEVICE_SHARD_QUANTUM):
+                   quantum: int = DEVICE_SHARD_QUANTUM,
+                   weights: np.ndarray | None = None):
     """Split the canonical COO across devices for the on-device sparse fit
-    (inner product psums; zero padding contributes +0.0 exactly)."""
+    (inner product psums; zero padding contributes +0.0 exactly).
+
+    With ``weights`` (per-entry observation weights, canonical order) the
+    result is the WEIGHTED fit contract ``(idx, vals, ew, norm_sq)``:
+    padding slots get weight 0, and ``norm_sq`` is the weighted
+    ``sum_e w_e x_e^2`` (replicated per device) so every front door
+    reports the same weighted fit."""
     nnz = tensor.nnz
     per = max(-(-max(-(-nnz // kappa), 1) // quantum) * quantum, quantum)
     idx = np.zeros((kappa, per, tensor.nmodes), np.int32)
     vals = np.zeros((kappa, per), np.float32)
+    ew = np.zeros((kappa, per), np.float32) if weights is not None else None
     flat_v = tensor.values.astype(np.float32)
+    flat_w = (np.asarray(weights, np.float32)
+              if weights is not None else None)
     for p in range(kappa):
         s = p * per
         e = min(nnz, s + per)
         if e > s:
             idx[p, : e - s] = tensor.indices[s:e]
             vals[p, : e - s] = flat_v[s:e]
+            if ew is not None:
+                ew[p, : e - s] = flat_w[s:e]
+    if ew is not None:
+        norm_sq = np.broadcast_to(
+            np.float32((flat_w * flat_v) @ flat_v), (kappa,)).copy()
+        return idx, vals, ew, norm_sq
     norm_sq = np.broadcast_to(
         np.float32(tensor.norm() ** 2), (kappa,)).copy()
     return idx, vals, norm_sq

@@ -48,10 +48,25 @@ class PackedModeLayout:
     # mask-weighted MTTKRP path re-threads per-sweep residual values
     # through the SAME packed slabs without repacking on host.
     val_scatter: np.ndarray | None = None
+    # (1, G*T) float32 per-entry observation weights packed alongside the
+    # values (None when the layout is unweighted).  Padding slots carry
+    # weight 0 — the SAME exact-no-op mechanism slab/nnz padding uses, now
+    # general: any entry the caller down-weights to 0 vanishes from the
+    # accumulation bit-exactly.
+    wts_packed: np.ndarray | None = None
 
     @property
     def num_slabs(self) -> int:
         return int(self.rb_of.shape[0])
+
+    def weighted_vals(self) -> np.ndarray:
+        """Kernel-ready weighted values: ``vals_packed * wts_packed`` (or
+        ``vals_packed`` unchanged for an unweighted packing).  Feeding
+        these to the kernel computes the weighted MTTKRP with zero extra
+        device work — weights are folded at pack time."""
+        if self.wts_packed is None:
+            return self.vals_packed
+        return (self.vals_packed * self.wts_packed).astype(np.float32)
 
     @property
     def bucket_key(self) -> tuple:
@@ -74,12 +89,18 @@ def pack_slabs(
     block_rows: int = DEFAULT_BLOCK_ROWS,
     tile: int = DEFAULT_TILE,
     num_slabs_cap: int | None = None,
+    weights: np.ndarray | None = None,
 ) -> PackedModeLayout:
     """Pack row-sorted COO data into per-row-block slabs of ``tile`` nonzeros.
 
     Every row block gets >= 1 slab (empty blocks get one all-padding slab so
     their output block is zero-initialized).  Padding entries carry value 0
     and indices 0, contributing nothing.
+
+    ``weights`` — optional per-entry observation weights aligned with
+    ``values`` (layout order).  They are packed into ``wts_packed`` through
+    the identical slab placement (padding slots get weight 0), so
+    ``weighted_vals()`` is the weighted kernel input.
 
     ``num_slabs_cap`` (from ``core.plan.slab_cap``) pads the grid with
     appended all-zero slabs on the LAST row block, making the packed array
@@ -113,8 +134,14 @@ def pack_slabs(
     valid = np.arange(tile)[None, :] < length[:, None]
     src_c = np.minimum(src, max(nnz - 1, 0))
 
+    if weights is not None and len(weights) != nnz:
+        raise ValueError(
+            f"weights length {len(weights)} != nnz {nnz}")
+    wts_p = None
     if nnz:
         vals_p = np.where(valid, values[src_c], 0).astype(np.float32)
+        if weights is not None:
+            wts_p = np.where(valid, weights[src_c], 0).astype(np.float32)
         idx_p = np.where(valid[:, :, None], input_indices[src_c], 0).astype(np.int32)
         lrow_p = np.where(
             valid, rows[src_c] - slab_block[:, None] * block_rows, 0
@@ -129,6 +156,8 @@ def pack_slabs(
         val_scatter[src[valid]] = flat[valid].astype(np.int32)
     else:
         vals_p = np.zeros((G, tile), np.float32)
+        if weights is not None:
+            wts_p = np.zeros((G, tile), np.float32)
         idx_p = np.zeros((G, tile, W), np.int32)
         lrow_p = np.zeros((G, tile), np.int32)
         val_scatter = np.zeros(0, dtype=np.int32)
@@ -149,6 +178,9 @@ def pack_slabs(
                 [rank, np.ones(extra, dtype=np.int64)])   # never first
             vals_p = np.concatenate(
                 [vals_p, np.zeros((extra, tile), np.float32)])
+            if wts_p is not None:
+                wts_p = np.concatenate(
+                    [wts_p, np.zeros((extra, tile), np.float32)])
             idx_p = np.concatenate(
                 [idx_p, np.zeros((extra, tile, W), np.int32)])
             lrow_p = np.concatenate(
@@ -173,17 +205,24 @@ def pack_slabs(
         pad_fraction=float(pad),
         num_real_slabs=G_real,
         val_scatter=val_scatter,
+        wts_packed=(None if wts_p is None
+                    else wts_p.reshape(1, G * tile).astype(np.float32)),
     )
 
 
 def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS,
                 tile: int = DEFAULT_TILE,
-                num_slabs_cap: int | None = None) -> PackedModeLayout:
+                num_slabs_cap: int | None = None,
+                weights: np.ndarray | None = None) -> PackedModeLayout:
     """Pack a ``core.layout.ModeLayout`` for kernel execution.
 
     With ``num_slabs_cap`` (see ``core.plan``) the packing is padded to the
     plan's static grid size — bucket-keyed: every layout of the same
-    (shape, nnz-bucket) class yields identically-shaped arrays."""
+    (shape, nnz-bucket) class yields identically-shaped arrays.
+
+    ``weights`` — per-entry observation weights in CANONICAL COO order
+    (the front-door contract); the layout's permutation maps them to the
+    packed slots alongside the values."""
     in_modes = layout.input_modes()
     return pack_slabs(
         layout.indices[:, in_modes],
@@ -195,6 +234,8 @@ def pack_layout(layout, *, block_rows: int = DEFAULT_BLOCK_ROWS,
         block_rows=block_rows,
         tile=tile,
         num_slabs_cap=num_slabs_cap,
+        weights=(None if weights is None
+                 else np.asarray(weights, np.float32)[layout.perm]),
     )
 
 
@@ -310,6 +351,11 @@ def mttkrp_packed(
     factor matrices in ``packed.input_modes`` order.  Returns the relabeled
     (num_rows, R) f32 output (trailing padding rows stripped).
 
+    A weighted packing (``pack_layout(weights=...)``) executes the
+    WEIGHTED MTTKRP: the kernel consumes ``weighted_vals()`` — values
+    pre-multiplied by their observation weights at the packed slots — so
+    weight-0 entries vanish exactly with zero extra device work.
+
     ``rank_block=None`` auto-sizes the rank tile from the VMEM model: the
     full rank stays resident when it fits, else the widest feasible column
     block is used and the kernel makes one slab pass per rank block."""
@@ -323,7 +369,7 @@ def mttkrp_packed(
         jnp.asarray(packed.rb_of),
         jnp.asarray(packed.first),
         jnp.asarray(packed.idx_packed),
-        jnp.asarray(packed.vals_packed),
+        jnp.asarray(packed.weighted_vals()),
         jnp.asarray(packed.lrows_packed),
         [jnp.asarray(f) for f in factors],
         num_row_blocks=packed.num_row_blocks,
@@ -340,9 +386,10 @@ def mttkrp_packed_ref(
     packed: PackedModeLayout, factors: Sequence[jnp.ndarray]
 ) -> jnp.ndarray:
     """jnp oracle evaluated on the *packed* arrays (padding included) —
-    bit-for-bit the same data the kernel sees."""
+    bit-for-bit the same data the kernel sees (weighted values for a
+    weighted packing, like ``mttkrp_packed``)."""
     idx = jnp.asarray(packed.idx_packed).T            # (G*T, W)
-    vals = jnp.asarray(packed.vals_packed)[0]
+    vals = jnp.asarray(packed.weighted_vals())[0]
     # Reconstruct absolute relabeled rows from block-local ones.
     lrows = jnp.asarray(packed.lrows_packed)[0]
     rb = jnp.repeat(jnp.asarray(packed.rb_of), packed.tile)

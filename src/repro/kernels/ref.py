@@ -43,9 +43,16 @@ def mttkrp_coo(
     factors: list[jnp.ndarray],
     mode: int,
     num_rows: int,
+    entry_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
     """Elementwise COO MTTKRP (unsorted; materializes the (nnz, R) Hadamard
-    intermediate — the traffic the paper's fused kernel avoids)."""
+    intermediate — the traffic the paper's fused kernel avoids).
+
+    ``entry_weights`` (per-nonzero observation weights) scale each entry's
+    contribution; weight 0 is an exact +0.0 no-op, the general form of the
+    zero-value padding invariance."""
+    if entry_weights is not None:
+        values = values.astype(jnp.float32) * entry_weights.astype(jnp.float32)
     acc = values[:, None].astype(jnp.float32)
     for w in range(len(factors)):
         if w == mode:
@@ -106,8 +113,16 @@ def mttkrp_sorted_segments(
     values: jnp.ndarray,          # (nnz,)
     factors: list[jnp.ndarray],   # W input factor matrices (I_w, R)
     num_rows: int,
+    entry_weights: jnp.ndarray | None = None,
 ) -> jnp.ndarray:
-    """Layout-aware oracle: same math as the Pallas kernel, f32 accumulate."""
+    """Layout-aware oracle: same math as the Pallas kernel, f32 accumulate.
+
+    ``entry_weights`` (layout order, aligned with ``values``) scale each
+    entry's contribution — weight-0 entries vanish exactly, so a weighted
+    layout and the same layout with those entries removed accumulate
+    bit-identically."""
+    if entry_weights is not None:
+        values = values.astype(jnp.float32) * entry_weights.astype(jnp.float32)
     acc = values[:, None].astype(jnp.float32)
     for w, fac in enumerate(factors):
         acc = acc * jnp.take(fac, input_indices[:, w], axis=0).astype(jnp.float32)

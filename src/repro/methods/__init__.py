@@ -15,11 +15,14 @@ top of them:
                monotone nondecreasing; identical MTTKRP + gram tail.
   masked     — masked/weighted CP completion: EM residual spMTTKRP
                (per-sweep values threaded through the valued kernel
-               entry point) + closed-form dense term; observed-only fit;
-               weight-0 padding keeps serving exact.
+               entry point) + closed-form dense term; observed-only
+               weighted fit with user-supplied per-entry confidences
+               (``weights=`` on every front door, sequential / batched /
+               distributed); weight-0 padding keeps serving exact.
   streaming  — stateful ``StreamingCP`` session: warm-started refinement
                folds nonzero increments into existing factors without a
-               full refit (inner method pluggable).
+               full refit (inner method pluggable; confidence mass
+               accumulates at re-observed coordinates).
 
 Adding a solver = writing ``build_sweep(ctx)`` against
 ``core.als_device.SweepContext`` and registering a ``MethodSpec`` —

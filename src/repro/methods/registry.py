@@ -13,8 +13,9 @@ only what is genuinely different about it —
     same state pytree contract as plain CP, so the sequential scan
     block, ``jax.vmap``, and donation all apply unchanged.
   * ``init_state_host``    — seeded host-numpy init (e.g. nonnegative).
-  * ``make_fit_data``      — per-request device fit inputs when the
-    method's fit differs (e.g. masked: per-entry observation weights).
+  * ``make_fit_data``      — ``(tensor, entry_weights=None)`` -> per-
+    request device fit inputs when the method's fit differs (e.g.
+    masked: per-entry observation weights, defaulting to all-ones).
   * ``valued_mode_data``   — the method re-threads fresh per-sweep values
     through the kernels (structural mode data + the valued MTTKRP entry
     point) instead of consuming values baked into the layout.
@@ -44,13 +45,15 @@ class MethodSpec:
     build_sweep: Callable | None = None
     # (shape, rank, seed) -> host state tuple; None -> the shared default.
     init_state_host: Callable | None = None
-    # (tensor) -> device fit_data pytree; None -> CP's (idx, vals, norm²).
+    # (tensor, entry_weights=None) -> device fit_data pytree; None -> CP's
+    # (idx, vals, norm²).
     make_fit_data: Callable | None = None
     # True: mode data is structural-only and the sweep threads fresh
     # values through the valued MTTKRP entry point each call.
     valued_mode_data: bool = False
-    # True: fit_data carries per-entry observation weights (the serving
-    # path zeroes them on nnz padding so padding stays an exact no-op).
+    # True: fit_data carries per-entry observation weights — the user
+    # front door (``weights=``) threads through them, and the serving
+    # path zeroes them on nnz padding so padding stays an exact no-op.
     weighted_fit: bool = False
     stateful: bool = False
     session_factory: Callable | None = None

@@ -13,7 +13,13 @@ warm (shape, nnz-bucket, method) class pays zero retrace.
 
 The inner method is pluggable: ``StreamingCP(rank, method="nncp")``
 streams a nonnegative decomposition (a warm nonnegative state stays
-nonnegative under HALS), ``method="cp"`` (default) the plain one.
+nonnegative under HALS), ``method="cp"`` (default) the plain one, and
+``method="masked"`` a weighted completion stream: ``start``/``update``
+then accept per-entry observation ``weights`` (fractional confidences),
+which merge alongside the values — at duplicate coordinates both the
+value and the confidence mass ADD, so re-observing an entry increases
+its weight in the refinement objective.  Increments without weights
+default to confidence 1 per entry.
 
 Routed through ``runtime.ALSRunner`` (``runner=`` or
 ``ALSRunner.open_stream()``), every refinement window goes through the
@@ -29,8 +35,29 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.coo import SparseTensor
+from ..core.coo import SparseTensor, _linearize
 from .registry import MethodSpec, get_method, register_method
+
+
+def _dedup_weighted(indices: np.ndarray, values: np.ndarray,
+                    weights: np.ndarray, shape):
+    """Joint canonical dedup: values AND confidence weights sum at
+    duplicate coordinates, in the same stable key order as
+    ``SparseTensor.deduplicate`` (so the unweighted path and this one
+    produce identically-ordered nnz lists)."""
+    keys = _linearize(indices, shape)
+    order = np.argsort(keys, kind="stable")
+    keys_s = keys[order]
+    uniq = np.empty(len(keys_s), dtype=bool)
+    uniq[:1] = True
+    uniq[1:] = keys_s[1:] != keys_s[:-1]
+    group = np.cumsum(uniq) - 1
+    n = int(group[-1]) + 1 if len(group) else 0
+    vals = np.zeros(n, dtype=np.float32)
+    np.add.at(vals, group, values[order].astype(np.float32))
+    wts = np.zeros(n, dtype=np.float32)
+    np.add.at(wts, group, weights[order].astype(np.float32))
+    return SparseTensor(indices[order][uniq], vals, shape), wts
 
 
 class StreamingCP:
@@ -53,23 +80,31 @@ class StreamingCP:
         self.solver = solver
         self.runner = runner
         self._tensor: SparseTensor | None = None
+        self._weights: np.ndarray | None = None
         self._state = None
         self._result = None
         self.increments = 0
 
     # -- substrate dispatch -------------------------------------------------
 
-    def _fit(self, tensor, n_iters, tol, seed, init_state):
+    def _fit(self, tensor, n_iters, tol, seed, init_state, weights=None):
         if self.runner is not None:
             return self.runner.decompose(
                 tensor, n_iters=n_iters, tol=tol, seed=seed,
-                method=self.method, init_state=init_state)
+                method=self.method, init_state=init_state, weights=weights)
         from ..core.als_device import cpd_als_fused
 
         return cpd_als_fused(
             tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
             seed=seed, backend=self.backend, check_every=self.check_every,
-            solver=self.solver, method=self.method, init_state=init_state)
+            solver=self.solver, method=self.method, init_state=init_state,
+            weights=weights)
+
+    def _check_weighted(self):
+        if not get_method(self.method).weighted_fit:
+            raise ValueError(
+                f"streaming weights require a weighted-fit inner method "
+                f"(e.g. 'masked'), got {self.method!r}")
 
     def _absorb(self, res):
         from ..core.als_device import state_from_factors
@@ -81,39 +116,69 @@ class StreamingCP:
     # -- public API ---------------------------------------------------------
 
     def start(self, tensor: SparseTensor, *, n_iters: int = 25,
-              tol: float = 1e-5, seed: int = 0):
-        """Cold fit on the initial nonzero set."""
-        self._tensor = tensor.deduplicate()
+              tol: float = 1e-5, seed: int = 0,
+              weights: np.ndarray | None = None):
+        """Cold fit on the initial nonzero set.  ``weights`` — per-entry
+        observation confidences (weighted-fit inner methods only); at
+        duplicate coordinates confidence mass sums alongside values."""
         self.increments = 0
-        return self._absorb(self._fit(self._tensor, n_iters, tol, seed, None))
+        if weights is not None:
+            self._check_weighted()
+            w = np.asarray(weights, np.float32)
+            self._tensor, self._weights = _dedup_weighted(
+                tensor.indices, tensor.values, w, tensor.shape)
+        else:
+            self._tensor = tensor.deduplicate()
+            self._weights = None
+        return self._absorb(self._fit(self._tensor, n_iters, tol, seed,
+                                      None, self._weights))
 
     def update(self, delta: SparseTensor, *, refine_iters: int | None = None,
-               tol: float = -1.0):
+               tol: float = -1.0, weights: np.ndarray | None = None):
         """Fold ``delta``'s nonzeros in (values at duplicate coordinates
-        ADD — the streaming-accumulation semantics) and refine the current
-        factors with ``refine_iters`` warm sweeps."""
+        ADD — the streaming-accumulation semantics; confidence weights
+        add too) and refine the current factors with ``refine_iters``
+        warm sweeps.  A weighted stream stays weighted: increments
+        without ``weights`` arrive at confidence 1 per entry."""
         if self._tensor is None:
             raise RuntimeError("call start() before update()")
         if tuple(delta.shape) != tuple(self._tensor.shape):
             raise ValueError(
                 f"increment shape {tuple(delta.shape)} != stream shape "
                 f"{tuple(self._tensor.shape)}")
-        merged = SparseTensor(
-            np.concatenate([self._tensor.indices, delta.indices], axis=0),
-            np.concatenate([self._tensor.values.astype(np.float32),
-                            delta.values.astype(np.float32)]),
-            self._tensor.shape,
-        ).deduplicate()
+        if weights is not None:
+            self._check_weighted()
+        idx = np.concatenate([self._tensor.indices, delta.indices], axis=0)
+        vals = np.concatenate([self._tensor.values.astype(np.float32),
+                               delta.values.astype(np.float32)])
+        if weights is not None or self._weights is not None:
+            w_old = (self._weights if self._weights is not None
+                     else np.ones(self._tensor.nnz, np.float32))
+            w_new = (np.asarray(weights, np.float32) if weights is not None
+                     else np.ones(delta.nnz, np.float32))
+            merged, self._weights = _dedup_weighted(
+                idx, vals, np.concatenate([w_old, w_new]),
+                self._tensor.shape)
+        else:
+            merged = SparseTensor(idx, vals,
+                                  self._tensor.shape).deduplicate()
         self._tensor = merged
         self.increments += 1
         k = self.refine_iters if refine_iters is None else int(refine_iters)
-        return self._absorb(self._fit(merged, k, tol, 0, self._state))
+        return self._absorb(self._fit(merged, k, tol, 0, self._state,
+                                      self._weights))
 
     # -- read side ----------------------------------------------------------
 
     @property
     def tensor(self) -> SparseTensor | None:
         return self._tensor
+
+    @property
+    def entry_weights(self) -> np.ndarray | None:
+        """Accumulated per-entry confidence mass (canonical order aligned
+        with ``tensor``); None for an unweighted stream."""
+        return self._weights
 
     @property
     def result(self):
@@ -130,7 +195,8 @@ STREAMING = register_method(MethodSpec(
     name="streaming",
     description="Streaming CP: stateful session folding nonzero increments "
                 "into existing factors via warm-started refinement sweeps "
-                "(inner method pluggable: cp or nncp).",
+                "(inner method pluggable: cp, nncp, or masked with "
+                "accumulating per-entry confidences).",
     stateful=True,
     session_factory=StreamingCP,
 ))

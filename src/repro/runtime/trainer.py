@@ -144,13 +144,16 @@ class ALSRunner:
 
     def decompose(self, tensor: SparseTensor, *, n_iters: int = 25,
                   tol: float = 1e-5, seed: int = 0, method: str = "cp",
-                  init_state: tuple | None = None, verbose: bool = False,
+                  init_state: tuple | None = None,
+                  weights=None, verbose: bool = False,
                   log: Callable[[str], None] = print) -> CPDResult:
         """Decompose one tensor.  ``method`` selects the decomposition
         method ('cp', 'nncp', 'masked' — see ``repro.methods``); in
         batched mode the request lands in its (shape, nnz-bucket, method)
         class, so mixed-method callers batch per method automatically.
-        ``init_state`` warm-starts from existing factors (streaming)."""
+        ``init_state`` warm-starts from existing factors (streaming);
+        ``weights`` carries per-entry observation confidences for
+        weighted-fit methods ('masked')."""
         from ..core.cpd import cpd_als
 
         before = self._cache_stats()
@@ -158,7 +161,8 @@ class ALSRunner:
         if self.mode == "batched":
             fut = self.service.submit(tensor, n_iters=n_iters, tol=tol,
                                       seed=seed, method=method,
-                                      init_state=init_state)
+                                      init_state=init_state,
+                                      weights=weights)
             res = fut.result()    # force-flushes this request's bucket
             if verbose:           # post-hoc trajectory at window boundaries
                 for i in range(self.check_every - 1, len(res.fits),
@@ -170,7 +174,7 @@ class ALSRunner:
                 tensor, self.rank, kappa=self.kappa, n_iters=n_iters, tol=tol,
                 seed=seed, backend=self.backend, engine=self.engine,
                 check_every=self.check_every, method=method,
-                init_state=init_state, verbose=verbose,
+                init_state=init_state, weights=weights, verbose=verbose,
             )
         dt = time.perf_counter() - t0
         self._record(tensor, res, dt, before, log)
@@ -178,7 +182,8 @@ class ALSRunner:
 
     def decompose_async(self, tensor: SparseTensor, *, n_iters: int = 25,
                         tol: float = 1e-5, seed: int = 0,
-                        method: str = "cp", init_state: tuple | None = None):
+                        method: str = "cp", init_state: tuple | None = None,
+                        weights=None):
         """Submit without blocking (batched mode only): returns a
         ``DecompositionFuture``.  The request completes when its bucket
         flushes (max-batch, max-wait via ``poll()``, ``flush()``, or the
@@ -188,7 +193,7 @@ class ALSRunner:
             raise RuntimeError("decompose_async requires mode='batched'")
         return self.service.submit(tensor, n_iters=n_iters, tol=tol,
                                    seed=seed, method=method,
-                                   init_state=init_state)
+                                   init_state=init_state, weights=weights)
 
     def open_stream(self, *, method: str = "cp", refine_iters: int = 2):
         """Open a streaming-CP session routed through this runner: every

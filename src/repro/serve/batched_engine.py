@@ -27,8 +27,9 @@ Decomposition methods (``repro.methods``) batch through the same door:
 ``decompose_batch(method=...)`` vmaps that method's sweep under the same
 executable cache.  The masked method's mode data is structural-only
 (per-sweep residual values are scattered on device), its fit data
-carries per-entry observation weights — zeroed on nnz padding, which is
-what keeps padding exact for completion — and ``init_states`` threads
+carries per-entry observation weights — user-supplied fractional
+confidences via ``weights=`` (default 1), zeroed on nnz padding, which
+is what keeps padding exact for completion — and ``init_states`` threads
 warm starts (the streaming method's increments) through the service.
 
 Backends: ``segment`` (default; per-tensor mode layouts are stacked —
@@ -238,12 +239,16 @@ class BatchedEngine:
 
     def _stack_batch(self, tensors: list[SparseTensor],
                      padded: list[SparseTensor], nnz_cap: int,
-                     method: str = "cp", density: tuple | None = None):
+                     method: str = "cp", density: tuple | None = None,
+                     weights: Sequence | None = None):
         """Stacked per-mode device arrays + fit data for the vmapped sweep.
 
         Returns ``(mode_data_all, fit_data, pallas_meta)``; the meta tuple
         is ``None`` except for the pallas backend, where it carries the
-        bucket plan's static tiling (part of the executable key)."""
+        bucket plan's static tiling (part of the executable key).
+        ``weights`` — optional per-request entry-weight vectors (canonical
+        order, ``None`` entries meaning all-ones) for weighted-fit
+        methods."""
         spec = None
         if method != "cp":
             from ..methods import get_method
@@ -254,17 +259,29 @@ class BatchedEngine:
         idx = jnp.asarray(np.stack([t.indices for t in padded]))
         vals = jnp.asarray(np.stack(
             [t.values.astype(np.float32) for t in padded]))
-        norms = jnp.asarray(
-            np.array([t.norm() ** 2 for t in padded], dtype=np.float32))
         if spec is not None and spec.weighted_fit:
-            # Observation weights: 1 on real entries, 0 on nnz padding —
-            # the masked analogue of plain CP's exact zero-value padding.
-            ew = jnp.asarray(np.stack([
-                np.concatenate([np.ones(t.nnz, np.float32),
-                                np.zeros(nnz_cap - t.nnz, np.float32)])
-                for t in tensors]))
+            # Observation weights: the request's own confidences (default
+            # 1) on real entries, 0 on nnz padding — the masked analogue
+            # of plain CP's exact zero-value padding, generalized to
+            # user-supplied fractional weights.  The norm term weights
+            # accordingly so the batched fit matches the sequential one.
+            if weights is None:
+                weights = [None] * len(tensors)
+            ew_rows, norms_w = [], []
+            for t, w in zip(tensors, weights):
+                base = (np.ones(t.nnz, np.float32) if w is None
+                        else als_device.normalize_entry_weights(
+                            als_device.validate_entry_weights(t.nnz, w)))
+                ew_rows.append(np.concatenate(
+                    [base, np.zeros(nnz_cap - t.nnz, np.float32)]))
+                v = t.values.astype(np.float32)
+                norms_w.append(float((base * v) @ v))
+            ew = jnp.asarray(np.stack(ew_rows))
+            norms = jnp.asarray(np.array(norms_w, dtype=np.float32))
             fit_data = (idx, vals, ew, norms)
         else:
+            norms = jnp.asarray(
+                np.array([t.norm() ** 2 for t in padded], dtype=np.float32))
             fit_data = (idx, vals, norms)
         if self.backend == "coo":
             if structural:
@@ -315,6 +332,7 @@ class BatchedEngine:
         method: str = "cp",
         init_states: Sequence[tuple | None] | None = None,
         density: tuple | None = None,
+        weights: Sequence | None = None,
     ) -> list[CPDResult]:
         """Decompose B same-shape tensors in vmapped lockstep.
 
@@ -325,6 +343,10 @@ class BatchedEngine:
         optional per-tensor list of host state tuples (see
         ``als_device.state_from_factors``) warm-starting individual
         requests — ``None`` entries fall back to the method's seeded init.
+        ``weights`` is an optional per-tensor list of entry-weight vectors
+        (canonical COO order; ``None`` entries mean all-ones) for
+        weighted-fit methods — padding appends weight-0 slots, so a
+        weighted batched request matches its sequential run.
         Returned ``CPDResult``s carry per-tensor factors/fits/iters;
         ``total_seconds`` and ``host_syncs`` are *batch-level* (shared by
         all B results — the whole point is that the batch paid them once).
@@ -341,6 +363,11 @@ class BatchedEngine:
                 raise ValueError(
                     f"method {method!r} is stateful; drive it through its "
                     f"session API (ALSRunner.open_stream)")
+        if weights is not None and any(w is not None for w in weights) and (
+                spec is None or not spec.weighted_fit):
+            raise ValueError(
+                f"per-entry weights require a weighted-fit method "
+                f"(e.g. 'masked'), got method={method!r}")
         t_start = time.perf_counter()
         B = len(tensors)
         shape = tuple(int(s) for s in tensors[0].shape)
@@ -364,9 +391,11 @@ class BatchedEngine:
             raise ValueError("seeds must match batch size")
         if init_states is not None and len(init_states) != B:
             raise ValueError("init_states must match batch size")
+        if weights is not None and len(weights) != B:
+            raise ValueError("weights must match batch size")
 
         mode_data_all, fit_data, pallas_meta = self._stack_batch(
-            tensors, padded, cap, method, density)
+            tensors, padded, cap, method, density, weights)
         # Host-side init, stacked once: one upload per state leaf instead
         # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
         init_fn = (spec.init_state_host if spec is not None
@@ -434,5 +463,6 @@ class BatchedEngine:
                 total_seconds=wall,
                 host_syncs=host_syncs,
                 engine="batched",
+                method=method,
             ))
         return results

@@ -101,6 +101,7 @@ class _Pending:
     seed: int
     t_submit: float
     init_state: tuple | None = None
+    weights: np.ndarray | None = None
 
 
 class BatchScheduler:
@@ -127,18 +128,38 @@ class BatchScheduler:
 
     def submit(self, tensor: SparseTensor, *, n_iters: int = 25,
                tol: float = 1e-5, seed: int = 0, method: str = "cp",
-               init_state: tuple | None = None) -> DecompositionFuture:
+               init_state: tuple | None = None,
+               weights: np.ndarray | None = None) -> DecompositionFuture:
         """Enqueue one request.  ``method`` routes to the decomposition
         method's (shape, nnz-bucket, method) class — a mixed-method
         stream batches per method but shares plans and kernels.
-        ``init_state`` warm-starts this request (streaming sessions)."""
+        ``init_state`` warm-starts this request (streaming sessions);
+        ``weights`` carries per-entry observation confidences for
+        weighted-fit methods ('masked') — bucket-mates keep their own
+        weight vectors, and the flush pads each with weight-0 entries so
+        batching stays exact.
+
+        Weights are validated HERE, eagerly: a flush-time failure would
+        belong to the whole batch and fail innocent bucket-mates'
+        futures, so a malformed vector (wrong length, NaN, negative, or
+        weights on a non-weighted method) must raise at the offending
+        caller's submit instead."""
+        if weights is not None:
+            from ..core.als_device import validate_entry_weights
+            from ..methods import get_method
+
+            if not get_method(method).weighted_fit:
+                raise ValueError(
+                    f"per-entry weights require a weighted-fit method "
+                    f"(e.g. 'masked'), got method={method!r}")
+            weights = validate_entry_weights(tensor.nnz, weights)
         bucket = self.policy.bucket_for(tensor, method)
         now = self.clock()
         with self._lock:
             fut = DecompositionFuture(self, bucket)
             self._queues.setdefault(bucket, []).append(
                 _Pending(tensor, fut, int(n_iters), float(tol), int(seed),
-                         now, init_state))
+                         now, init_state, weights))
             self.metrics.record_submit(now)
             work = self._pop_ready()
         self._run_batches(work)
@@ -241,6 +262,7 @@ class BatchScheduler:
                 method=bucket.method,
                 init_states=[p.init_state for p in batch],
                 density=density,
+                weights=[p.weights for p in batch],
             )
         except BaseException as exc:
             # Executor semantics: the failure belongs to the batch's own

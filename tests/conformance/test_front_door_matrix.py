@@ -1,0 +1,189 @@
+"""Cross-path conformance matrix: every method rides every front door.
+
+THE single place that pins the uniformity contract of the methods
+subsystem: for each decomposition method (cp / nncp / masked, weighted
+and unweighted) the three front doors —
+
+  * sequential fused engine   (``cpd_als``)
+  * batched service           (``ALSRunner`` -> bucketed vmapped engine)
+  * distributed shard_map     (``cpd_als_distributed``, 8 virtual devices)
+
+— must produce fp32-tolerance-identical factors and fits from the same
+seed, and request metadata (method, entry weights) must round-trip
+unmutated.  The fast cells run sequential-vs-batched across backends in
+process; the distributed cells spawn an 8-virtual-device subprocess (jax
+pins its device count at first init) and are marked ``slow`` so tier-1
+stays fast — CI's distributed job runs them with ``-m slow``.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import cpd_als, cpd_als_fused, random_sparse
+from repro.runtime import ALSRunner
+
+REPO = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+
+SHAPE = (16, 12, 9)
+
+# (method, weighted): the weighted cell exercises the per-entry
+# observation-confidence front door end to end.
+CASES = [("cp", False), ("nncp", False), ("masked", False),
+         ("masked", True)]
+
+
+def _stream(n=3, seed0=0):
+    """Bucket-mates of DIFFERENT nnz, so the service pads every request
+    (the conformance claim covers padded execution, not just B=1)."""
+    ts = [random_sparse(SHAPE, 380 - 31 * i, seed=seed0 + i,
+                        distribution="powerlaw") for i in range(n)]
+    rng = np.random.default_rng(42)
+    ws = [rng.uniform(0.25, 1.75, t.nnz).astype(np.float32) for t in ts]
+    return ts, ws
+
+
+def _maybe_pos(t, method):
+    """nncp wants nonnegative data for a meaningful (still conformant)
+    trajectory."""
+    if method != "nncp":
+        return t
+    from repro.core import SparseTensor
+
+    return SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+
+
+@pytest.mark.parametrize("backend", ["segment", "coo"])
+@pytest.mark.parametrize("method,weighted", CASES)
+def test_sequential_vs_batched_service(method, weighted, backend):
+    ts, ws = _stream()
+    runner = ALSRunner(rank=3, kappa=2, backend=backend, check_every=2)
+    for i, t in enumerate(ts):
+        t = _maybe_pos(t, method)
+        w = ws[i].copy() if weighted else None
+        w_before = None if w is None else w.copy()
+        res = runner.decompose(t, n_iters=4, tol=-1.0, seed=7 + i,
+                               method=method, weights=w)
+        ref = cpd_als(t, 3, kappa=2, n_iters=4, tol=-1.0, seed=7 + i,
+                      backend=backend, check_every=2, method=method,
+                      weights=w)
+        np.testing.assert_allclose(res.fits, ref.fits, rtol=1e-5, atol=1e-5)
+        for Fb, Fr in zip(res.factors, ref.factors):
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-4, atol=1e-4)
+        # Metadata round-trip: the result names its method and front
+        # door, and the caller's weight vector is never mutated.
+        assert res.method == method and ref.method == method
+        assert res.engine == "batched" and ref.engine == "fused"
+        if w is not None:
+            np.testing.assert_array_equal(w, w_before)
+
+
+@pytest.mark.parametrize("method,weighted",
+                         [("masked", False), ("masked", True)])
+def test_sequential_vs_batched_service_pallas(method, weighted):
+    """One pallas column of the matrix (interpret mode is slow on CPU, so
+    only the masked rows — the valued-scatter path — run here; plain-CP
+    pallas batching is pinned bit-exactly in tests/core/test_plan.py)."""
+    ts, ws = _stream(n=2)
+    runner = ALSRunner(rank=3, kappa=2, backend="pallas", check_every=2)
+    for i, t in enumerate(ts):
+        w = ws[i] if weighted else None
+        res = runner.decompose(t, n_iters=3, tol=-1.0, seed=1 + i,
+                               method=method, weights=w)
+        ref = cpd_als_fused(t, 3, kappa=2, n_iters=3, tol=-1.0, seed=1 + i,
+                            backend="segment", check_every=2, method=method,
+                            weights=w)
+        np.testing.assert_allclose(res.fits, ref.fits, rtol=1e-4, atol=1e-4)
+        for Fb, Fr in zip(res.factors, ref.factors):
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-3, atol=1e-3)
+
+
+def _run_dist(code: str, devices: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("method,weighted", CASES)
+def test_all_three_front_doors_agree(method, weighted):
+    """The acceptance matrix: sequential fused, batched service, and the
+    8-virtual-device distributed engine produce fp32-tolerance-identical
+    factors for every method, weighted masked included.  The tensor's
+    smallest mode (I_d = 6 < 8 devices) forces scheme 2 on one mode, so
+    the matrix covers both load-balancing schemes' collectives."""
+    out = _run_dist(f"""
+        import numpy as np
+        from repro.core import SparseTensor, cpd_als, random_sparse
+        from repro.core.distributed import cpd_als_distributed
+        from repro.runtime import ALSRunner
+
+        method, weighted = {method!r}, {weighted!r}
+        t = random_sparse((48, 32, 6), 1500, seed=5,
+                          distribution="powerlaw")
+        if method == "nncp":
+            t = SparseTensor(t.indices, np.abs(t.values) + 0.1, t.shape)
+        w = (np.random.default_rng(1)
+             .uniform(0.25, 1.75, t.nnz).astype(np.float32)
+             if weighted else None)
+
+        seq = cpd_als(t, 4, n_iters=6, tol=-1.0, seed=2, check_every=3,
+                      method=method, weights=w)
+        runner = ALSRunner(rank=4, backend="segment", check_every=3)
+        bat = runner.decompose(t, n_iters=6, tol=-1.0, seed=2,
+                               method=method, weights=w)
+        dist = cpd_als_distributed(t, rank=4, n_iters=6, tol=-1.0, seed=2,
+                                   check_every=3, method=method, weights=w)
+
+        assert (seq.engine, bat.engine, dist.engine) == (
+            "fused", "batched", "distributed")
+        assert seq.method == bat.method == dist.method == method
+        for name, res in (("batched", bat), ("distributed", dist)):
+            np.testing.assert_allclose(res.fits, seq.fits,
+                                       rtol=1e-4, atol=1e-4, err_msg=name)
+            for Fa, Fb in zip(res.factors, seq.factors):
+                np.testing.assert_allclose(Fa, Fb, rtol=1e-3, atol=1e-3,
+                                           err_msg=name)
+        print("PASS", method, weighted, seq.fits[-1])
+    """)
+    assert "PASS" in out
+
+
+@pytest.mark.slow
+def test_distributed_weight0_equals_absent():
+    """The weight-0 exactness mechanism holds on the distributed path
+    too: zeroing an entry's weight matches (to fp32 shard tolerance)
+    removing the entry — even though the two runs shard differently."""
+    out = _run_dist("""
+        import numpy as np
+        from repro.core import SparseTensor, random_sparse
+        from repro.core.distributed import cpd_als_distributed
+
+        t = random_sparse((48, 32, 6), 1500, seed=9,
+                          distribution="powerlaw")
+        rng = np.random.default_rng(3)
+        w = rng.uniform(0.25, 1.75, t.nnz).astype(np.float32)
+        drop = rng.choice(t.nnz, size=40, replace=False)
+        keep = np.ones(t.nnz, bool); keep[drop] = False
+        w0 = w.copy(); w0[drop] = 0.0
+
+        a = cpd_als_distributed(t, rank=4, n_iters=5, tol=-1.0, seed=2,
+                                check_every=5, method="masked", weights=w0)
+        t_red = SparseTensor(t.indices[keep], t.values[keep], t.shape)
+        b = cpd_als_distributed(t_red, rank=4, n_iters=5, tol=-1.0, seed=2,
+                                check_every=5, method="masked",
+                                weights=w[keep])
+        for Fa, Fb in zip(a.factors, b.factors):
+            np.testing.assert_allclose(Fa, Fb, rtol=1e-3, atol=1e-3)
+        print("PASS", a.fits[-1], b.fits[-1])
+    """)
+    assert "PASS" in out

@@ -1,0 +1,267 @@
+"""Property tests for per-entry observation weights (the CP-WOPT-style
+front door): weight-0 entries are EXACTLY absent, all-ones weights are
+exactly the unweighted masked path, rescaling the weight vector leaves
+the argmin invariant, and nnz padding stays exact for weighted buckets.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import SparseTensor, cpd_als, cpd_als_fused, random_sparse
+from repro.serve import BatchedEngine
+
+SHAPE = (16, 12, 9)
+
+
+def _weighted_tensor(nnz, seed):
+    t = random_sparse(SHAPE, nnz, seed=seed, distribution="powerlaw")
+    w = (np.random.default_rng(seed + 100)
+         .uniform(0.25, 1.75, t.nnz).astype(np.float32))
+    return t, w
+
+
+# ---------------------------------------------------------------------------
+# weight-0 entry == entry absent (bit-identical factors)
+# ---------------------------------------------------------------------------
+
+
+def _weight0_equals_absent(nnz, seed, backend, ndrop):
+    """Zeroing an entry's weight produces BIT-identical factors to
+    deleting the entry: its residual is exactly +0.0 in the valued
+    MTTKRP and the fit, and stable layout sorts keep every other entry's
+    accumulation order."""
+    t, w = _weighted_tensor(nnz, seed)
+    drop = np.random.default_rng(seed).choice(t.nnz, size=ndrop,
+                                              replace=False)
+    keep = np.ones(t.nnz, bool)
+    keep[drop] = False
+    w0 = w.copy()
+    w0[drop] = 0.0
+    kw = dict(n_iters=4, tol=-1.0, check_every=2, method="masked",
+              backend=backend)
+    a = cpd_als(t, 3, weights=w0, **kw)
+    t_red = SparseTensor(t.indices[keep], t.values[keep], t.shape)
+    b = cpd_als(t_red, 3, weights=w[keep], **kw)
+    for Fa, Fb in zip(a.factors, b.factors):
+        assert np.array_equal(Fa, Fb), "factors not bit-identical"
+    np.testing.assert_allclose(a.fits, b.fits, rtol=1e-6, atol=1e-7)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(st.sampled_from([180, 300, 420]), st.integers(0, 4),
+           st.sampled_from(["segment", "coo"]), st.integers(1, 24))
+    def test_property_weight0_equals_absent(nnz, seed, backend, ndrop):
+        _weight0_equals_absent(nnz, seed, backend, ndrop)
+else:
+    @pytest.mark.parametrize("nnz,seed,backend,ndrop",
+                             [(180, 0, "segment", 1), (300, 2, "coo", 24),
+                              (420, 4, "segment", 7), (300, 1, "coo", 12)])
+    def test_property_weight0_equals_absent(nnz, seed, backend, ndrop):
+        """Fixed-example fallback when hypothesis is unavailable."""
+        _weight0_equals_absent(nnz, seed, backend, ndrop)
+
+
+def test_weight0_equals_absent_pallas():
+    """Same property through the slab-packed valued-scatter path — to
+    fp32 tolerance rather than bitwise: deleting an interior entry shifts
+    later entries into different slabs, so the kernel's per-tile matmuls
+    reassociate (bit-identity is specific to APPENDED padding, which
+    cannot move real entries)."""
+    t, w = _weighted_tensor(300, 3)
+    drop = np.random.default_rng(3).choice(t.nnz, size=9, replace=False)
+    keep = np.ones(t.nnz, bool)
+    keep[drop] = False
+    w0 = w.copy()
+    w0[drop] = 0.0
+    kw = dict(n_iters=4, tol=-1.0, check_every=2, method="masked",
+              backend="pallas")
+    a = cpd_als(t, 3, weights=w0, **kw)
+    t_red = SparseTensor(t.indices[keep], t.values[keep], t.shape)
+    b = cpd_als(t_red, 3, weights=w[keep], **kw)
+    for Fa, Fb in zip(a.factors, b.factors):
+        np.testing.assert_allclose(Fa, Fb, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# all-ones weights == the unweighted masked path
+# ---------------------------------------------------------------------------
+
+
+def _ones_equals_none(nnz, seed, backend):
+    t, _ = _weighted_tensor(nnz, seed)
+    kw = dict(n_iters=4, tol=-1.0, check_every=2, method="masked",
+              backend=backend)
+    a = cpd_als(t, 3, weights=np.ones(t.nnz, np.float32), **kw)
+    b = cpd_als(t, 3, **kw)
+    for Fa, Fb in zip(a.factors, b.factors):
+        assert np.array_equal(Fa, Fb)
+    assert a.fits == b.fits
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(st.sampled_from([180, 300, 420]), st.integers(0, 4),
+           st.sampled_from(["segment", "coo", "pallas"]))
+    def test_property_ones_equals_unweighted(nnz, seed, backend):
+        _ones_equals_none(nnz, seed, backend)
+else:
+    @pytest.mark.parametrize("nnz,seed,backend",
+                             [(180, 0, "segment"), (300, 2, "coo"),
+                              (420, 1, "pallas")])
+    def test_property_ones_equals_unweighted(nnz, seed, backend):
+        """Fixed-example fallback when hypothesis is unavailable."""
+        _ones_equals_none(nnz, seed, backend)
+
+
+# ---------------------------------------------------------------------------
+# weight rescaling leaves the argmin invariant
+# ---------------------------------------------------------------------------
+
+
+def _low_rank_observed(shape, rank, seed, frac=0.6):
+    rng = np.random.default_rng(seed)
+    factors = [rng.standard_normal((I, rank)).astype(np.float32)
+               for I in shape]
+    full = np.einsum("ir,jr,kr->ijk", *factors)
+    coords = np.indices(shape).reshape(len(shape), -1).T.astype(np.int32)
+    obs = coords[rng.permutation(len(coords))[: int(len(coords) * frac)]]
+    return SparseTensor(obs, full[tuple(obs.T)].astype(np.float32), shape)
+
+
+def _rescaling_invariance(scale, seed):
+    """``w`` and ``c*w`` define the same weighted LS objective up to a
+    constant factor, so they share stationary points (the EM trajectory's
+    RATE does depend on the scale — weights act as per-entry step sizes
+    in the filled-tensor update — so the sharp testable form is
+    fixed-point invariance): a converged solution under ``w`` stays put
+    under ``c*w``, and the fit — whose numerator and denominator both
+    scale by sqrt(c) — is unchanged."""
+    from repro.core import state_from_factors
+
+    t = _low_rank_observed((10, 8, 6), 2, seed)
+    w = (np.random.default_rng(seed + 7)
+         .uniform(0.5, 1.5, t.nnz).astype(np.float32))
+    a = cpd_als(t, 2, weights=w, n_iters=150, tol=1e-9, check_every=10,
+                method="masked", seed=1)
+    assert a.fits[-1] > 0.99, f"reference run did not converge: {a.fits[-1]}"
+    warm = state_from_factors(a.factors, a.weights)
+    b = cpd_als(t, 2, weights=scale * w, n_iters=6, tol=-1.0,
+                check_every=6, method="masked", init_state=warm)
+    assert abs(a.fits[-1] - b.fits[-1]) < 1e-3, (a.fits[-1], b.fits[-1])
+    ra, rb = a.reconstruct_at(t.indices), b.reconstruct_at(t.indices)
+    rel = (np.linalg.norm(ra - rb)
+           / max(np.linalg.norm(ra), 1e-12))
+    assert rel < 1e-2, f"rescaled argmin drifted: rel={rel:.2e}"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(st.sampled_from([0.25, 0.5, 2.0, 8.0]), st.integers(0, 3))
+    def test_property_weight_rescaling_argmin_invariant(scale, seed):
+        _rescaling_invariance(scale, seed)
+else:
+    @pytest.mark.parametrize("scale,seed",
+                             [(0.25, 0), (0.5, 2), (2.0, 1), (8.0, 3)])
+    def test_property_weight_rescaling_argmin_invariant(scale, seed):
+        """Fixed-example fallback when hypothesis is unavailable."""
+        _rescaling_invariance(scale, seed)
+
+
+# ---------------------------------------------------------------------------
+# padding invariance extends to weighted buckets
+# ---------------------------------------------------------------------------
+
+
+def _weighted_bucket_padding(nnz_list, cap, backend):
+    """Batched bucket-mates with user weights + weight-0 nnz padding match
+    their sequential weighted runs: padding appends weight-0 entries, the
+    general exact-no-op mechanism."""
+    ts, ws = [], []
+    for i, nnz in enumerate(nnz_list):
+        t, w = _weighted_tensor(nnz, i)
+        ts.append(t)
+        ws.append(w)
+    eng = BatchedEngine(rank=3, kappa=2, backend=backend, check_every=2)
+    batch = eng.decompose_batch(ts, n_iters=4, tol=-1.0,
+                                seeds=list(range(7, 7 + len(ts))),
+                                nnz_cap=cap, method="masked", weights=ws)
+    for i, t in enumerate(ts):
+        ref = cpd_als_fused(t, 3, kappa=2, n_iters=4, tol=-1.0, seed=7 + i,
+                            backend="segment", check_every=2,
+                            method="masked", weights=ws[i])
+        np.testing.assert_allclose(batch[i].fits, ref.fits,
+                                   rtol=1e-5, atol=1e-5)
+        for Fb, Fr in zip(batch[i].factors, ref.factors):
+            np.testing.assert_allclose(Fb, Fr, rtol=1e-4, atol=1e-4)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(st.lists(st.sampled_from([180, 240, 300, 380]),
+                    min_size=2, max_size=3),
+           st.sampled_from(["segment", "coo"]))
+    def test_property_weighted_bucket_padding_invariance(nnz_list, backend):
+        _weighted_bucket_padding(nnz_list, 384, backend)
+else:
+    @pytest.mark.parametrize("nnz_list,backend",
+                             [([180, 300, 380], "segment"),
+                              ([240, 240], "coo"),
+                              ([380, 180], "segment")])
+    def test_property_weighted_bucket_padding_invariance(nnz_list, backend):
+        """Fixed-example fallback when hypothesis is unavailable."""
+        _weighted_bucket_padding(nnz_list, 384, backend)
+
+
+# ---------------------------------------------------------------------------
+# kernels layer: weights pack alongside values
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_packing_roundtrip():
+    """``pack_layout(weights=...)`` places each entry's weight at its
+    value's slab slot (padding weight 0), and ``weighted_vals()`` equals
+    weighting the values up front — one packed artifact serves both the
+    weighted and unweighted kernels."""
+    from repro.core.layout import build_mode_layout
+    from repro.kernels import ops as kops
+
+    t = random_sparse((30, 9, 7), 400, seed=6, distribution="powerlaw")
+    w = (np.random.default_rng(0)
+         .uniform(0.0, 2.0, t.nnz).astype(np.float32))
+    lay = build_mode_layout(t, 0, 2)
+    packed = kops.pack_layout(lay, block_rows=8, tile=64, weights=w)
+    # Weights land at the same slots as their values.
+    rebuilt = np.zeros_like(packed.wts_packed)
+    rebuilt[0, packed.val_scatter] = w[lay.perm]
+    np.testing.assert_array_equal(rebuilt, packed.wts_packed)
+    # weighted_vals == packing pre-weighted values.
+    pre = kops.pack_layout(lay, block_rows=8, tile=64)
+    manual = np.zeros_like(pre.vals_packed)
+    manual[0, pre.val_scatter] = (lay.values.astype(np.float32)
+                                  * w[lay.perm])
+    np.testing.assert_allclose(packed.weighted_vals(), manual,
+                               rtol=1e-6, atol=1e-7)
+    assert pre.wts_packed is None and pre.weighted_vals() is pre.vals_packed
+    # The one-shot kernel entries consume the weighted values: a weighted
+    # packing executes the weighted MTTKRP, matching the weighted COO
+    # oracle (weight-0 entries vanish).
+    import jax.numpy as jnp
+    from repro.kernels import ref as kref
+
+    factors = [jnp.asarray(np.random.default_rng(1)
+                           .standard_normal((I, 4)).astype(np.float32))
+               for I in t.shape]
+    got = np.asarray(kops.mttkrp_packed_ref(
+        packed, [factors[m] for m in packed.input_modes]))
+    want = np.asarray(kref.mttkrp_coo(
+        jnp.asarray(t.indices), jnp.asarray(t.values.astype(np.float32)),
+        factors, 0, t.shape[0], entry_weights=jnp.asarray(w)))
+    # packed output is in relabeled row space
+    want_rel = want[lay.row_perm]
+    np.testing.assert_allclose(got, want_rel, rtol=1e-4, atol=1e-5)

@@ -53,6 +53,24 @@ _SECTIONS = ("table3", "fig3", "fig4", "fig5", "kernel", "als", "serve",
              "methods", "dist", "roofline")
 _FLAGS = ("--smoke",)
 
+# The streaming row once buried a 370x retrace regression behind a bare
+# speedup number.  These fields are the regression's witnesses (hit rate,
+# per-increment cost, host merge cost); a methods run whose streaming row
+# lacks any of them fails the whole runner loudly.
+_STREAMING_REQUIRED = ("cache_hit_rate", "s_per_increment", "host_merge_s")
+
+
+def _check_methods_rows(rows) -> None:
+    streaming = [r for r in (rows or [])
+                 if isinstance(r, dict)
+                 and r.get("name") == "methods/streaming"]
+    if not streaming:
+        sys.exit("methods section produced no 'methods/streaming' row")
+    missing = [f for f in _STREAMING_REQUIRED if f not in streaming[0]]
+    if missing:
+        sys.exit(f"methods/streaming row is missing required fields "
+                 f"{missing}; present: {sorted(streaming[0])}")
+
 
 def main() -> None:
     argv = sys.argv[1:]
@@ -124,6 +142,8 @@ def main() -> None:
         t0 = time.time()
         rows = fn()
         wall = time.time() - t0
+        if name == "methods":
+            _check_methods_rows(rows if isinstance(rows, list) else None)
         path = emit_json(name, wall, rows if isinstance(rows, list) else None,
                          {"argv": argv, "smoke": smoke})
         print(f"===== done in {wall:.1f}s -> {path.relative_to(path.parents[1])} =====")

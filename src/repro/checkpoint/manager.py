@@ -127,14 +127,8 @@ class CheckpointManager:
 
     # -- restore --------------------------------------------------------------
 
-    def restore(self, step: int | None = None, *, template: Any = None,
-                shardings: Any = None) -> tuple[Any, dict]:
-        """Load checkpoint ``step`` (default latest).
-
-        template: pytree giving the target structure (required).
-        shardings: optional matching pytree of NamedShardings — arrays are
-          device_put against them (elastic restore onto any topology).
-        Returns (tree, extra)."""
+    def _load_host(self, step: int | None):
+        """Shared committed-checkpoint loader: meta + host arrays."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -144,6 +138,28 @@ class CheckpointManager:
             meta = msgpack.unpackb(f.read())
         data = np.load(os.path.join(base, "arrays.npz"))
         host = [data[f"a{i}"] for i in range(len(meta["paths"]))]
+        return meta, host
+
+    def restore_items(self, step: int | None = None) -> tuple[dict, dict]:
+        """Template-free restore: ``(dict of path -> host array, extra)``.
+
+        The template-based ``restore`` demands exact shapes known up
+        front — right for fixed training state, wrong for consumers whose
+        array shapes are part of the checkpointed state itself (e.g. a
+        streaming session's growing nonzero set).  Those rebuild from the
+        flat path map and the ``extra`` metadata instead."""
+        meta, host = self._load_host(step)
+        return dict(zip(meta["paths"], host)), meta.get("extra", {})
+
+    def restore(self, step: int | None = None, *, template: Any = None,
+                shardings: Any = None) -> tuple[Any, dict]:
+        """Load checkpoint ``step`` (default latest).
+
+        template: pytree giving the target structure (required).
+        shardings: optional matching pytree of NamedShardings — arrays are
+          device_put against them (elastic restore onto any topology).
+        Returns (tree, extra)."""
+        meta, host = self._load_host(step)
 
         if template is None:
             raise ValueError("restore requires a template pytree")

@@ -462,6 +462,14 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
 # ---------------------------------------------------------------------------
 
 
+# Every jitted sweep block ever built, for trace accounting: the lru key
+# above deliberately omits nnz (jit re-specializes per array shape inside
+# one cache entry), so lru hits/misses alone cannot see the retrace a
+# NOVEL nnz causes.  Summing each jitted block's own trace count over
+# this registry can.
+_SWEEP_BLOCK_REGISTRY: list = []
+
+
 @functools.lru_cache(maxsize=None)
 def _build_sweep_block(backend: str, nmodes: int, rank: int,
                        shapes: tuple[int, ...],
@@ -482,7 +490,9 @@ def _build_sweep_block(backend: str, nmodes: int, rank: int,
         state, fits = lax.scan(body, state, xs=None, length=block)
         return state, fits
 
-    return jax.jit(run_block, donate_argnums=(0,) if donate else ())
+    fn = jax.jit(run_block, donate_argnums=(0,) if donate else ())
+    _SWEEP_BLOCK_REGISTRY.append(fn)
+    return fn
 
 
 @functools.lru_cache(maxsize=None)
@@ -521,6 +531,26 @@ def sweep_cache_stats():
     info = _build_sweep_block.cache_info()
     return {"hits": info.hits, "misses": info.misses,
             "currsize": info.currsize}
+
+
+def sweep_trace_stats():
+    """Total TRACES across all jitted sweep blocks — the probe the lru
+    stats above cannot provide: nnz is not part of the lru key (jit
+    re-specializes per argument shape inside one entry), so a stream of
+    ever-novel nnz counts shows lru hits while silently retracing every
+    call.  ``traces`` counts actual specializations; a zero-retrace
+    streaming increment leaves it unchanged.  Best-effort: jax's
+    ``_cache_size`` is version-private, so absent introspection support
+    this reports blocks only (traces=None)."""
+    traces = 0
+    have = False
+    for fn in _SWEEP_BLOCK_REGISTRY:
+        size = getattr(fn, "_cache_size", None)
+        if size is not None:
+            traces += int(size())
+            have = True
+    return {"blocks": len(_SWEEP_BLOCK_REGISTRY),
+            "traces": traces if have else None}
 
 
 def _collect_mode_data(plan: MTTKRPPlan, backend: str, rank: int):

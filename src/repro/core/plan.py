@@ -84,6 +84,20 @@ def quantize_nnz(nnz: int, *, mode: str = "quantum", quantum: int = 128,
     raise ValueError(f"unknown bucketing mode {mode!r}")
 
 
+def session_cap(nnz: int, current_cap: int, policy) -> int:
+    """Monotone per-session bucket cap: quantize ``nnz`` through
+    ``policy`` (any object with an ``nnz_cap(nnz)`` rule, i.e. a
+    ``serve.buckets.BucketPolicy``) but never below the session's
+    ``current_cap``.  A streaming session's fit-time nnz is pinned to its
+    largest-seen executable class: shrinking the cap after an eviction
+    would present NEW (smaller) array shapes to the engine and retrace —
+    the exact cost the quantization exists to avoid — whereas holding the
+    old cap merely keeps some already-compiled zero-weight padding slots.
+    With geometric bucketing, a session therefore compiles O(log peak
+    nnz) executables over its whole lifetime."""
+    return max(int(current_cap), int(policy.nnz_cap(nnz)))
+
+
 def slab_cap(num_rows: int, nnz_cap: int, block_rows: int, tile: int) -> int:
     """Static upper bound on the packed grid size G for ANY tensor of this
     mode with ``nnz <= nnz_cap``:  every row block contributes at least one

@@ -85,7 +85,8 @@ class ALSRunner:
                  engine: str = "fused", check_every: int = 4,
                  monitor: StragglerMonitor | None = None,
                  mode: str | None = None, max_batch: int = 8,
-                 max_wait_s: float = 0.005, policy=None):
+                 max_wait_s: float = 0.005, batch_quantum: int = 1,
+                 policy=None):
         if mode is None:
             # Default to the batched service where it supports the
             # configuration (all three fused backends, pallas included
@@ -114,7 +115,8 @@ class ALSRunner:
 
             self.service = DecompositionService(
                 rank, kappa=kappa, backend=backend, check_every=check_every,
-                policy=policy, max_batch=max_batch, max_wait_s=max_wait_s)
+                policy=policy, max_batch=max_batch, max_wait_s=max_wait_s,
+                batch_quantum=batch_quantum)
 
     def _cache_stats(self) -> dict:
         if self.mode == "batched":
@@ -195,16 +197,35 @@ class ALSRunner:
                                    seed=seed, method=method,
                                    init_state=init_state, weights=weights)
 
-    def open_stream(self, *, method: str = "cp", refine_iters: int = 2):
+    def open_stream(self, *, method: str = "cp", refine_iters: int = 2,
+                    policy="auto", decay: float | None = None,
+                    weight_floor: float = 0.0,
+                    resume_from: str | None = None,
+                    session_id: str | None = None):
         """Open a streaming-CP session routed through this runner: every
         cold fit and warm refinement window goes through the same front
         door (and, in batched mode, the same bucketed service — so
-        concurrent sessions of one bucket class batch together)."""
+        concurrent sessions of one bucket class batch together).
+
+        ``policy`` / ``decay`` / ``weight_floor`` configure the session's
+        bucket quantization and confidence-decay eviction (see
+        ``StreamingCP``).  ``resume_from`` names a checkpoint directory:
+        if it holds a committed session snapshot the stream resumes from
+        it (same tensor, factors, seed, decay clock, and bucket cap —
+        rerouted through THIS runner); otherwise a fresh session is
+        returned, so one call site serves both cold start and restart
+        after a crash."""
         from ..methods import StreamingCP
 
+        if resume_from is not None:
+            mgr = CheckpointManager(str(resume_from))
+            if mgr.latest_step() is not None:
+                return StreamingCP.restore(mgr, runner=self)
         return StreamingCP(self.rank, method=method, backend=self.backend,
                            kappa=self.kappa, check_every=self.check_every,
-                           refine_iters=refine_iters, runner=self)
+                           refine_iters=refine_iters, runner=self,
+                           policy=policy, decay=decay,
+                           weight_floor=weight_floor, session_id=session_id)
 
     def poll(self) -> int:
         return self.service.poll() if self.service else 0

@@ -68,7 +68,7 @@ from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
 from ..core.layout import build_all_mode_layouts
 from ..kernels import ops as kops
-from .buckets import pad_tensor
+from .buckets import pad_tensor, pad_weights
 
 _BATCH_BACKENDS = ("segment", "coo", "pallas")
 
@@ -272,8 +272,7 @@ class BatchedEngine:
                 base = (np.ones(t.nnz, np.float32) if w is None
                         else als_device.normalize_entry_weights(
                             als_device.validate_entry_weights(t.nnz, w)))
-                ew_rows.append(np.concatenate(
-                    [base, np.zeros(nnz_cap - t.nnz, np.float32)]))
+                ew_rows.append(pad_weights(base, nnz_cap))
                 v = t.values.astype(np.float32)
                 norms_w.append(float((base * v) @ v))
             ew = jnp.asarray(np.stack(ew_rows))

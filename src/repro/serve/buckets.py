@@ -123,6 +123,22 @@ class BucketPolicy:
                       self.nnz_cap(tensor.nnz), method)
 
 
+def pad_weights(weights: np.ndarray, nnz_cap: int) -> np.ndarray:
+    """Extend a per-entry observation-weight vector with zeros to
+    ``nnz_cap`` — the companion of ``pad_tensor`` for weighted methods,
+    where padding entries must carry weight 0 (a zero VALUE alone would
+    claim the tensor is observed-zero at the origin).  PR 5's conformance
+    suite proved weight-0 == absent bit-identically, which is what makes
+    the padded weighted decomposition exact."""
+    w = np.asarray(weights, np.float32)
+    if len(w) > nnz_cap:
+        raise ValueError(
+            f"weight vector length {len(w)} exceeds bucket cap {nnz_cap}")
+    if len(w) == nnz_cap:
+        return w
+    return np.concatenate([w, np.zeros(nnz_cap - len(w), np.float32)])
+
+
 def pad_tensor(tensor: SparseTensor, nnz_cap: int) -> SparseTensor:
     """Append zero-valued entries at coordinate (0, …, 0) until
     ``nnz == nnz_cap``.  Appending (not interleaving) keeps every real

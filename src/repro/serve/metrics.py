@@ -21,13 +21,22 @@ skewed stream's tilings are priced against its real skew instead of the
 uniform prior, while quantization (1/16 grid) bounds how many distinct
 plans (and therefore executables) one bucket can cycle through.
 
-All recording goes through the scheduler's lock, so the counters need no
-locking of their own.
+Streaming sessions are a second write side: each ``StreamingCP`` routed
+through a runner reports one ``record_stream_increment`` per update
+(``start()`` registers the residency gauges without counting), and
+``snapshot()["streams"]`` exposes the per-session gauges (bucket
+residency, eviction counts, increment latency p50/p99) — how the
+serving tier sees the stateful workload.
+
+Batch recording goes through the scheduler's lock, so those counters
+need no locking of their own; stream recording arrives from session
+threads outside the scheduler and carries its own lock.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 
 import numpy as np
 
@@ -69,6 +78,10 @@ class ServiceMetrics:
         self._triggers = collections.Counter()
         # bucket key -> list of per-mode EWMA row-density profiles
         self._density: dict[tuple, list[np.ndarray]] = {}
+        # session id -> per-session streaming gauges (own lock: sessions
+        # record from outside the scheduler's critical section)
+        self._streams: dict[str, dict] = {}
+        self._streams_lock = threading.Lock()
 
     # -- write side (called by the scheduler under its lock) ----------------
 
@@ -131,6 +144,32 @@ class ServiceMetrics:
             out.append(tuple(float(x) for x in q))
         return tuple(out)
 
+    def record_stream_increment(self, session_id: str, *, bucket_cap: int,
+                                nnz: int, evicted: int, wall_s: float,
+                                merge_s: float, window: int = 512,
+                                count: bool = True):
+        """Fold one streaming update into the session's gauges: current
+        bucket residency (cap + live nnz), cumulative increment/eviction
+        counts, host-merge seconds, and a sliding window of increment
+        wall times for the latency percentiles.  ``count=False``
+        registers/refreshes the residency gauges without counting an
+        increment or recording latency — the cold ``start()`` fit, whose
+        compile-heavy wall time would poison the increment percentiles."""
+        with self._streams_lock:
+            s = self._streams.get(session_id)
+            if s is None:
+                s = self._streams[session_id] = {
+                    "increments": 0, "evictions": 0, "merge_s": 0.0,
+                    "lat": collections.deque(maxlen=window),
+                }
+            s["bucket_cap"] = int(bucket_cap)
+            s["nnz"] = int(nnz)
+            s["merge_s"] += float(merge_s)
+            if count:
+                s["increments"] += 1
+                s["evictions"] += int(evicted)
+                s["lat"].append(float(wall_s))
+
     # -- read side ----------------------------------------------------------
 
     def snapshot(self) -> dict:
@@ -159,4 +198,23 @@ class ServiceMetrics:
                 t: self._triggers.get(t, 0)
                 for t in ("max_batch", "max_wait", "aging", "forced")
             },
+            "streams": self._stream_snapshot(),
         }
+
+    def _stream_snapshot(self) -> dict:
+        with self._streams_lock:
+            out = {}
+            for sid, s in self._streams.items():
+                lat = np.asarray(s["lat"], dtype=np.float64)
+                out[sid] = {
+                    "bucket_cap": s.get("bucket_cap", 0),
+                    "nnz": s.get("nnz", 0),
+                    "increments": s["increments"],
+                    "evictions": s["evictions"],
+                    "merge_s": s["merge_s"],
+                    "increment_p50_s": (float(np.percentile(lat, 50))
+                                        if lat.size else 0.0),
+                    "increment_p99_s": (float(np.percentile(lat, 99))
+                                        if lat.size else 0.0),
+                }
+            return out

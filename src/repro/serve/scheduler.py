@@ -111,14 +111,20 @@ class BatchScheduler:
                  policy: BucketPolicy | None = None,
                  max_batch: int = 8,
                  max_wait_s: float = 0.005,
+                 batch_quantum: int = 1,
                  metrics: ServiceMetrics | None = None,
                  clock: Callable[[], float] = time.monotonic):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if batch_quantum < 1 or batch_quantum > max_batch:
+            raise ValueError(
+                f"batch_quantum must be in [1, max_batch], "
+                f"got {batch_quantum}")
         self.engine = engine
         self.policy = policy or BucketPolicy()
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
+        self.batch_quantum = int(batch_quantum)
         self.metrics = metrics or ServiceMetrics()
         self.clock = clock
         self._queues: dict[Bucket, list[_Pending]] = {}
@@ -251,18 +257,28 @@ class BatchScheduler:
         # a bucket runs under the uniform prior — by construction there
         # is nothing observed yet).
         density = self.metrics.row_density(bucket.key)
+        # Batch-size quantization: B is part of the vmapped executable's
+        # cache key, so a stream whose flushes land on varying batch
+        # sizes retraces per size.  Rounding the dispatched B up to the
+        # next multiple of ``batch_quantum`` (capped at max_batch) by
+        # repeating the last request stabilizes that key component; the
+        # duplicate slots are exact under vmap (independent lanes) and
+        # their results are simply discarded below.
+        q = self.batch_quantum
+        target = min(self.max_batch, -(-len(batch) // q) * q)
+        exec_batch = batch + [batch[-1]] * (target - len(batch))
         t0 = time.perf_counter()
         try:
             results = self.engine.decompose_batch(
-                [p.tensor for p in batch],
-                n_iters=[p.n_iters for p in batch],
-                tol=[p.tol for p in batch],
-                seeds=[p.seed for p in batch],
+                [p.tensor for p in exec_batch],
+                n_iters=[p.n_iters for p in exec_batch],
+                tol=[p.tol for p in exec_batch],
+                seeds=[p.seed for p in exec_batch],
                 nnz_cap=bucket.nnz_cap,
                 method=bucket.method,
-                init_states=[p.init_state for p in batch],
+                init_states=[p.init_state for p in exec_batch],
                 density=density,
-                weights=[p.weights for p in batch],
+                weights=[p.weights for p in exec_batch],
             )
         except BaseException as exc:
             # Executor semantics: the failure belongs to the batch's own
@@ -299,7 +315,7 @@ class BatchScheduler:
                     batch_size=len(batch),
                     max_batch=self.max_batch,
                     real_nnz=sum(p.tensor.nnz for p in batch),
-                    padded_nnz=bucket.nnz_cap * len(batch),
+                    padded_nnz=bucket.nnz_cap * len(exec_batch),
                     wall_s=wall,
                     trigger=trigger,
                     cache_hits=stats1["hits"] - stats0["hits"],
@@ -322,14 +338,15 @@ class DecompositionService:
     def __init__(self, rank: int, *, kappa: int = 1,
                  backend: str = "segment", check_every: int = 4,
                  policy: BucketPolicy | None = None, max_batch: int = 8,
-                 max_wait_s: float = 0.005,
+                 max_wait_s: float = 0.005, batch_quantum: int = 1,
                  clock: Callable[[], float] = time.monotonic):
         self.engine = BatchedEngine(rank, kappa=kappa, backend=backend,
                                     check_every=check_every)
         self.metrics = ServiceMetrics()
         self.scheduler = BatchScheduler(
             self.engine, policy=policy, max_batch=max_batch,
-            max_wait_s=max_wait_s, metrics=self.metrics, clock=clock)
+            max_wait_s=max_wait_s, batch_quantum=batch_quantum,
+            metrics=self.metrics, clock=clock)
 
     def submit(self, tensor: SparseTensor, **kw) -> DecompositionFuture:
         return self.scheduler.submit(tensor, **kw)

@@ -109,6 +109,24 @@ def test_streaming_nonnegative_inner_method():
         assert (F >= 0.0).all()
 
 
+def test_update_threads_session_seed():
+    """update() refines with the SESSION's start seed, not a hardcoded 0
+    — restarted-vs-continuous sessions stay reproducible."""
+    seen = []
+
+    class Recorder(StreamingCP):
+        def _fit(self, n_iters, tol, seed, init_state):
+            seen.append(seed)
+            return super()._fit(n_iters, tol, seed, init_state)
+
+    s = Recorder(2, refine_iters=1, check_every=1)
+    t = random_sparse((6, 5, 4), 40, seed=0)
+    s.start(SparseTensor(t.indices[:25], t.values[:25], (6, 5, 4)),
+            n_iters=2, tol=-1.0, seed=17)
+    s.update(SparseTensor(t.indices[25:], t.values[25:], (6, 5, 4)))
+    assert seen == [17, 17]
+
+
 def test_update_before_start_raises():
     s = StreamingCP(3)
     with pytest.raises(RuntimeError, match="start"):

@@ -1,0 +1,121 @@
+"""obs section: cost-model-vs-measured validation + trace artifacts.
+
+Replays the Table-3 generators through the obs calibration harness
+(``repro.obs.calibrate``) per backend, joining the analytic cost model
+in ``benchmarks/device_model.py`` (RTX-3090-class constants) against
+MEASURED span durations from the tracer, and emits:
+
+  * BENCH rows (via ``benchmarks/run.py obs``): per-backend
+    ``predicted_over_observed`` ratio per dataset, per-mode shard
+    imbalance under the 8-virtual-device mesh, compile-vs-steady window
+    split, and one retrace-ledger row with ``expected_max_traces`` —
+    the CI recompile ceiling (each registered executable should trace
+    at most once in a fresh smoke process; more means a retrace leak).
+  * ``results/obs_smoke.trace.json`` — Chrome-trace export of the whole
+    run (drop onto ``about:tracing`` / Perfetto), validated before
+    writing.
+  * ``results/obs_smoke.jsonl``     — the raw JSONL span/event dump the
+    ``python -m repro.obs.report`` dashboard consumes.
+
+The predicted/observed ratio is NOT expected to be ~1.0 here: the model
+prices a GPU while CI measures CPU (pallas under interpret).  The
+witness is that the ratio exists, is finite and positive, and is stable
+per backend — which is what validates the model for RELATIVE decisions
+(tile choice, scheme choice, format ranking).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.obs import calibrate, trace as obs_trace
+from repro.obs.ledger import LEDGER
+
+from . import device_model
+from .common import RANK, load_datasets
+from .run import RESULTS_DIR
+
+# Backend → device-model format.  segment and pallas both implement the
+# paper's fused mode-specific layout ("ours"); coo is the ParTI-like
+# naive baseline.
+_BACKEND_FMT = {"segment": "ours", "pallas": "ours", "coo": "naive-coo"}
+
+_SMOKE_DATASETS = ("uber", "nips")
+_FULL_DATASETS = ("chicago", "enron", "nips", "uber", "vast")
+
+
+def _predict_fn(tensor, mode, backend):
+    return device_model.mode_cost(
+        tensor, mode, _BACKEND_FMT[backend]).total_s
+
+
+def _ledger_row(expected_max_traces: int) -> dict:
+    row = {"name": "obs/ledger", "section": "ledger",
+           "expected_max_traces": expected_max_traces}
+    total_blocks = 0
+    for kind in LEDGER.kinds():
+        s = LEDGER.stats(kind)
+        total_blocks += s["blocks"]
+        row[f"{kind}_blocks"] = s["blocks"]
+        row[f"{kind}_traces"] = s["traces"]
+    row["blocks"] = total_blocks
+    row["traces"] = LEDGER.stats()["traces"]
+    return row
+
+
+def main(argv: list[str] | None = None) -> list[dict]:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in argv
+    names = _SMOKE_DATASETS if smoke else _FULL_DATASETS
+    backends = ("segment", "coo") if smoke else ("segment", "coo", "pallas")
+    scale = 0.02 if smoke else None
+    datasets = (load_datasets(scale=scale) if scale is not None
+                else load_datasets())
+
+    LEDGER.reset()
+    rows: list[dict] = []
+    with obs_trace.capture("obs_bench") as tr:
+        for name in names:
+            t = datasets[name]
+            print(f"obs: calibrating {name} "
+                  f"(nnz={t.nnz}, backends={backends}) ...")
+            rows.extend(calibrate.calibrate_tensor(
+                name, t, rank=RANK, backends=backends,
+                predict_fn=_predict_fn,
+                reps=2 if smoke else 3,
+                imbalance_reps=5 if smoke else 20))
+
+        # Retrace ceiling: every executable registered during this run
+        # should have traced exactly once (fresh process, fixed shapes).
+        ledger = _ledger_row(expected_max_traces=sum(
+            LEDGER.stats(k)["blocks"] for k in LEDGER.kinds()))
+        rows.append(ledger)
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    chrome = RESULTS_DIR / "obs_smoke.trace.json"
+    jsonl = RESULTS_DIR / "obs_smoke.jsonl"
+    doc = tr.to_chrome()
+    obs_trace.validate_chrome(doc)        # never commit an invalid trace
+    tr.dump_chrome(chrome)
+    tr.dump_jsonl(jsonl)
+    print(f"obs: {len(tr.records())} trace records -> {chrome.name}, "
+          f"{jsonl.name}")
+
+    for r in rows:
+        if r["section"] == "ratio":
+            print(f"  {r['dataset']:10s} {r['backend']:8s} "
+                  f"pred/obs={r['predicted_over_observed']:.3g}  "
+                  f"compile={r['compile_overhead_s']:.3f}s "
+                  f"steady={r['steady_window_s']:.4f}s")
+        elif r["section"] == "imbalance":
+            print(f"  {r['dataset']:10s} imbalance "
+                  f"measured<={r['max_measured_imbalance']:.3f} "
+                  f"nnz<={r['max_nnz_imbalance']:.3f}")
+        else:
+            print(f"  ledger: {r['blocks']} executables, "
+                  f"traces={r['traces']} "
+                  f"(ceiling {r['expected_max_traces']})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

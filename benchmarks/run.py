@@ -18,6 +18,8 @@ import pathlib
 import sys
 import time
 
+from repro.obs import clock as obs_clock
+
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "results"
 
 
@@ -50,7 +52,7 @@ def emit_json(name: str, wall_s: float, rows, config: dict) -> pathlib.Path:
 
 
 _SECTIONS = ("table3", "fig3", "fig4", "fig5", "kernel", "als", "serve",
-             "methods", "dist", "roofline")
+             "methods", "dist", "roofline", "obs")
 _FLAGS = ("--smoke",)
 
 # The streaming row once buried a 370x retrace regression behind a bare
@@ -70,6 +72,34 @@ def _check_methods_rows(rows) -> None:
     if missing:
         sys.exit(f"methods/streaming row is missing required fields "
                  f"{missing}; present: {sorted(streaming[0])}")
+
+
+# The obs section's witnesses: every backend row must carry a finite
+# predicted-vs-observed ratio, every imbalance row the measured factor,
+# and the ledger row must stay under its recompile ceiling (a fresh
+# process traces each executable at most once — more is a retrace leak).
+def _check_obs_rows(rows) -> None:
+    rows = [r for r in (rows or []) if isinstance(r, dict)]
+    ratio = [r for r in rows if r.get("section") == "ratio"]
+    imb = [r for r in rows if r.get("section") == "imbalance"]
+    ledger = [r for r in rows if r.get("section") == "ledger"]
+    if not ratio or not imb or not ledger:
+        sys.exit(f"obs section missing row kinds: ratio={len(ratio)} "
+                 f"imbalance={len(imb)} ledger={len(ledger)}")
+    for r in ratio:
+        po = r.get("predicted_over_observed")
+        if not isinstance(po, float) or not (po > 0.0):
+            sys.exit(f"obs row {r.get('name')} has no positive "
+                     f"predicted_over_observed (got {po!r})")
+    for r in imb:
+        if not isinstance(r.get("max_measured_imbalance"), float):
+            sys.exit(f"obs row {r.get('name')} lacks "
+                     f"max_measured_imbalance")
+    led = ledger[0]
+    traces, ceiling = led.get("traces"), led.get("expected_max_traces")
+    if traces is not None and traces > ceiling:
+        sys.exit(f"retrace ledger over ceiling: {traces} traces for "
+                 f"{ceiling} executables — a jit cache is re-specializing")
 
 
 def main() -> None:
@@ -136,14 +166,22 @@ def main() -> None:
         from . import roofline
         sections.append(("roofline", "roofline table (from dry-run)",
                          roofline.main))
+    if on("obs"):
+        from . import obs_bench
+        sections.append(("obs", "observability (cost model vs measured, "
+                         "trace artifacts)",
+                         lambda: obs_bench.main(["--smoke"] if smoke
+                                                else [])))
 
     for name, title, fn in sections:
         print(f"\n===== {title} =====")
-        t0 = time.time()
+        t0 = obs_clock.now()
         rows = fn()
-        wall = time.time() - t0
+        wall = obs_clock.now() - t0
         if name == "methods":
             _check_methods_rows(rows if isinstance(rows, list) else None)
+        if name == "obs":
+            _check_obs_rows(rows if isinstance(rows, list) else None)
         path = emit_json(name, wall, rows if isinstance(rows, list) else None,
                          {"argv": argv, "smoke": smoke})
         print(f"===== done in {wall:.1f}s -> {path.relative_to(path.parents[1])} =====")

@@ -22,10 +22,10 @@ import os
 import re
 import shutil
 import threading
-import time
 from typing import Any
 
 import msgpack
+from ..obs import clock as obs_clock
 import numpy as np
 
 import jax
@@ -83,7 +83,7 @@ class CheckpointManager:
             "shapes": [list(a.shape) for a in host],
             "dtypes": [str(a.dtype) for a in host],
             "extra": extra or {},
-            "time": time.time(),
+            "time": obs_clock.wall(),   # epoch timestamp, not a duration
         }
 
         def _write():

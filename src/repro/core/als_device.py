@@ -56,7 +56,6 @@ from __future__ import annotations
 import dataclasses
 import functools
 import inspect
-import time
 from typing import Callable
 
 import numpy as np
@@ -68,6 +67,9 @@ from jax.scipy import linalg as jsla
 
 from ..kernels import ref as kref
 from ..kernels.mttkrp_pallas import mttkrp_pallas
+from ..obs import clock as obs_clock
+from ..obs import trace as obs_trace
+from ..obs.ledger import LEDGER as _LEDGER
 from .coo import SparseTensor
 from .cpd import CPDResult
 from .mttkrp import MTTKRPPlan, make_plan
@@ -462,14 +464,6 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
 # ---------------------------------------------------------------------------
 
 
-# Every jitted sweep block ever built, for trace accounting: the lru key
-# above deliberately omits nnz (jit re-specializes per array shape inside
-# one cache entry), so lru hits/misses alone cannot see the retrace a
-# NOVEL nnz causes.  Summing each jitted block's own trace count over
-# this registry can.
-_SWEEP_BLOCK_REGISTRY: list = []
-
-
 @functools.lru_cache(maxsize=None)
 def _build_sweep_block(backend: str, nmodes: int, rank: int,
                        shapes: tuple[int, ...],
@@ -479,7 +473,13 @@ def _build_sweep_block(backend: str, nmodes: int, rank: int,
     """Jitted ``lax.scan`` of ``block`` consecutive sweeps: the whole
     check window is ONE dispatch.  Returns the carried state plus the
     per-iteration fit vector ``(block,)`` so the fit history stays
-    complete."""
+    complete.
+
+    Each built block registers in the obs retrace ledger: the lru key
+    here deliberately omits nnz (jit re-specializes per array shape
+    inside one cache entry), so lru hits/misses alone cannot see the
+    retrace a NOVEL nnz causes — the ledger's per-executable trace
+    counts can."""
     sweep = build_sweep_fn(backend, nmodes, rank, shapes, pallas_meta,
                            interpret, solver, method=method)
 
@@ -491,8 +491,10 @@ def _build_sweep_block(backend: str, nmodes: int, rank: int,
         return state, fits
 
     fn = jax.jit(run_block, donate_argnums=(0,) if donate else ())
-    _SWEEP_BLOCK_REGISTRY.append(fn)
-    return fn
+    return _LEDGER.register(
+        "sweep_block",
+        (backend, nmodes, rank, shapes, "block", block, "method", method),
+        fn)
 
 
 @functools.lru_cache(maxsize=None)
@@ -520,7 +522,10 @@ def _build_mttkrp_block(backend: str, nmodes: int, rank: int,
         s, _ = lax.scan(body, jnp.float32(0.0), xs=None, length=block)
         return s
 
-    return jax.jit(run)
+    return _LEDGER.register(
+        "mttkrp_block",
+        (backend, nmodes, rank, shapes, "block", block),
+        jax.jit(run))
 
 
 def sweep_cache_stats():
@@ -538,19 +543,19 @@ def sweep_trace_stats():
     stats above cannot provide: nnz is not part of the lru key (jit
     re-specializes per argument shape inside one entry), so a stream of
     ever-novel nnz counts shows lru hits while silently retracing every
-    call.  ``traces`` counts actual specializations; a zero-retrace
-    streaming increment leaves it unchanged.  Best-effort: jax's
-    ``_cache_size`` is version-private, so absent introspection support
-    this reports blocks only (traces=None)."""
-    traces = 0
-    have = False
-    for fn in _SWEEP_BLOCK_REGISTRY:
-        size = getattr(fn, "_cache_size", None)
-        if size is not None:
-            traces += int(size())
-            have = True
-    return {"blocks": len(_SWEEP_BLOCK_REGISTRY),
-            "traces": traces if have else None}
+    call.  ``traces`` counts actual specializations (as a delta since
+    the last ledger ``reset()`` — an autouse test fixture resets, so
+    assertions cannot leak across tests); a zero-retrace streaming
+    increment leaves it unchanged.  Best-effort: jax's ``_cache_size``
+    is version-private, so absent introspection support this reports
+    blocks only (traces=None).
+
+    This is now a view over ``repro.obs.ledger.LEDGER`` (which also
+    covers the MTTKRP-replay, batched, and distributed executables —
+    query those kinds there); the old module-global registry is gone.
+    """
+    s = _LEDGER.stats("sweep_block")
+    return {"blocks": s["blocks"], "traces": s["traces"]}
 
 
 def _collect_mode_data(plan: MTTKRPPlan, backend: str, rank: int):
@@ -719,7 +724,7 @@ def cpd_als_fused(
     for valued-mode-data methods (masked) ``mttkrp_seconds`` stays at the
     0.0 sentinel — use a named_scope profiler trace there.
     """
-    t_start = time.perf_counter()
+    t_start = obs_clock.now()
     N = tensor.nmodes
     check_every = max(1, int(check_every))
     spec = _method_spec(method)
@@ -790,14 +795,24 @@ def cpd_als_fused(
     last_fit = -np.inf
     it = 0
     windows_run: list[int] = []
+    tr = obs_trace.active()
     for b in range(n_blocks + (1 if rem else 0)):
         k = check_every if b < n_blocks else rem
         fn = sweep_k if b < n_blocks else sweep_rem
-        state, fits_blk = fn(state, mode_data_all, fit_data)
+        # Dispatch + the window-boundary fit sync, the per-window hot
+        # path: the tracing-disabled branch pays one global read and
+        # zero allocations (enforced by tests/obs/test_trace.py).
+        if tr is None:
+            state, fits_blk = fn(state, mode_data_all, fit_data)
+            f = float(fits_blk[-1])             # the only in-loop host sync
+        else:
+            with tr.span("als.window", cat="als", backend=backend,
+                         method=method, window=b, sweeps=k):
+                state, fits_blk = fn(state, mode_data_all, fit_data)
+                f = float(fits_blk[-1])         # the only in-loop host sync
         fits_dev.append(fits_blk)
         windows_run.append(k)
         it += k
-        f = float(fits_blk[-1])                 # the only in-loop host sync
         host_syncs += 1
         if verbose:
             print(f"  ALS iter {it:3d}: fit={f:.6f} ({method}/fused)")
@@ -822,7 +837,7 @@ def cpd_als_fused(
         fits=fits,
         iters=it,
         mttkrp_seconds=mttkrp_seconds,
-        total_seconds=time.perf_counter() - t_start,
+        total_seconds=obs_clock.now() - t_start,
         host_syncs=host_syncs,
         engine="fused",
         method=method,
@@ -840,8 +855,10 @@ def _profile_mttkrp_replay(backend, nmodes, rank, shapes, pallas_meta,
                                  interpret, k)
         jax.block_until_ready(fn(factors, mode_data_all))   # warm-up
         reps = windows_run.count(k)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            jax.block_until_ready(fn(factors, mode_data_all))
-        total += time.perf_counter() - t0
+        with obs_trace.span("mttkrp.replay", cat="als", backend=backend,
+                            block=k, reps=reps):
+            t0 = obs_clock.now()
+            for _ in range(reps):
+                jax.block_until_ready(fn(factors, mode_data_all))
+            total += obs_clock.now() - t0
     return total

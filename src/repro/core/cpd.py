@@ -14,7 +14,6 @@ reconstruction ever materializes.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -22,6 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs import clock as obs_clock
 from .coo import SparseTensor
 from .mttkrp import MTTKRPPlan, make_plan, mttkrp
 
@@ -117,7 +117,7 @@ def cpd_als(
             method=method, init_state=init_state, weights=weights,
             verbose=verbose,
         )
-    t_start = time.perf_counter()
+    t_start = obs_clock.now()
     rng = np.random.default_rng(seed)
     N = tensor.nmodes
     if plan is None:
@@ -138,14 +138,14 @@ def cpd_als(
     it = 0
     for it in range(1, n_iters + 1):
         for d in range(N):
-            t0 = time.perf_counter()
+            t0 = obs_clock.now()
             if mttkrp_fn is not None:
                 M = mttkrp_fn(plan, factors, d)
             else:
                 M = mttkrp(plan, factors, d, backend=backend)
             M = np.asarray(jax.block_until_ready(M), dtype=np.float64)
             host_syncs += 1
-            mttkrp_t += time.perf_counter() - t0
+            mttkrp_t += obs_clock.now() - t0
 
             V = np.ones((rank, rank))
             for w in range(N):
@@ -184,7 +184,7 @@ def cpd_als(
         fits=fits,
         iters=it,
         mttkrp_seconds=mttkrp_t,
-        total_seconds=time.perf_counter() - t_start,
+        total_seconds=obs_clock.now() - t_start,
         host_syncs=host_syncs,
         engine="host",
     )

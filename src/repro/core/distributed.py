@@ -55,8 +55,9 @@ try:
 except ImportError:  # older jax keeps shard_map under experimental
     from jax.experimental.shard_map import shard_map
 
-import time
-
+from ..obs import clock as obs_clock
+from ..obs import trace as obs_trace
+from ..obs.ledger import LEDGER as _LEDGER
 from . import plan as plan_mod
 from .als_device import (_host_state_to_device, _method_spec,
                          build_sweep_fn, normalize_entry_weights,
@@ -225,7 +226,11 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
         out_specs=(P(), P()),
         check_rep=False,
     )
-    return jax.jit(fn)
+    return _LEDGER.register(
+        "dist_block",
+        (nmodes, rank, shapes, "kappa", int(mesh_.devices.size),
+         "block", block, "method", method),
+        jax.jit(fn))
 
 
 def _collect_dist_data(plan: DistributedPlan):
@@ -274,7 +279,7 @@ def cpd_als_distributed(
     ``init_state`` warm-starts from existing factors — the same contracts
     as the sequential and batched front doors, so the three agree to fp32
     tolerance (``tests/conformance``)."""
-    t_start = time.perf_counter()
+    t_start = obs_clock.now()
     spec = _method_spec(method)
     if plan is None:
         plan = make_distributed_plan(tensor, mesh, method=method,
@@ -312,17 +317,31 @@ def cpd_als_distributed(
                                      rem, method, mode_width,
                                      fit_width) if rem else None
 
+    κ = plan.kappa
+    shard_nnz = [int(m.nnz_per_dev) for m in plan.modes]
     fits_dev: list = []
     host_syncs = 0
     last_fit = -np.inf
     it = 0
+    tr = obs_trace.active()
     for b in range(n_blocks + (1 if rem else 0)):
         k = check_every if b < n_blocks else rem
         fn = fn_k if b < n_blocks else fn_rem
-        state, fits_blk = fn(state, *flat)
+        # Per-window shard_map dispatch; the span carries the mesh size
+        # and the per-mode padded shard nnz so a trace attributes window
+        # time to shard load.  Disabled branch: one global read, zero
+        # allocations.
+        if tr is None:
+            state, fits_blk = fn(state, *flat)
+            f = float(fits_blk[-1])             # the only in-loop host sync
+        else:
+            with tr.span("dist.window", cat="dist", method=method,
+                         kappa=κ, window=b, sweeps=k,
+                         shard_nnz=shard_nnz):
+                state, fits_blk = fn(state, *flat)
+                f = float(fits_blk[-1])         # the only in-loop host sync
         fits_dev.append(fits_blk)
         it += k
-        f = float(fits_blk[-1])                 # the only in-loop host sync
         host_syncs += 1
         if verbose:
             print(f"  ALS iter {it:3d}: fit={f:.6f} (distributed)")
@@ -338,7 +357,7 @@ def cpd_als_distributed(
         fits=fits,
         iters=it,
         mttkrp_seconds=0.0,
-        total_seconds=time.perf_counter() - t_start,
+        total_seconds=obs_clock.now() - t_start,
         host_syncs=host_syncs,
         engine="distributed",
         method=method,

@@ -48,6 +48,7 @@ import functools
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs import trace as obs_trace
 from .load_balance import Scheme
 
 # Per-device nnz shards are padded up to a multiple of this, so tensors of
@@ -304,8 +305,20 @@ def plan_bucket(shape: tuple[int, ...], nnz_cap: int, rank: int,
         factor_rows = sum(shape[w] for w in stats.input_modes())
         modes.append(_mode_plan(stats, d, rank, factor_rows, nnz_cap,
                                 block_rows=block_rows, tile=tile))
-    return PartitionPlan(shape=shape, nnz_cap=int(nnz_cap), rank=int(rank),
+    plan = PartitionPlan(shape=shape, nnz_cap=int(nnz_cap), rank=int(rank),
                          kappa=int(kappa), modes=tuple(modes))
+    # Inside the lru-cached body, so the event fires once per NOVEL
+    # bucket class — a trace shows exactly which plans a stream induced
+    # (with the chosen tile/rank-block/slab-cap per mode), never the
+    # cache hits.
+    obs_trace.event(
+        "plan.build", cat="plan", shape=str(shape), nnz_cap=int(nnz_cap),
+        rank=int(rank), kappa=int(kappa),
+        observed_density=density is not None, plan=plan.describe(),
+        tiles=[{"mode": m.mode, "block_rows": m.block_rows, "tile": m.tile,
+                "rank_block": m.rank_block, "slab_cap": m.slab_cap}
+               for m in plan.modes])
+    return plan
 
 
 def plan_layout(layout, rank: int, *, nnz_cap: int | None = None,

@@ -15,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ..obs import trace as obs_trace
 from . import ref as ref_mod
 from .mttkrp_pallas import mttkrp_pallas
 
@@ -109,6 +110,37 @@ def pack_slabs(
     untouched (appending cannot shift slab boundaries) and each extra slab
     contributes ``+= 0.0`` to an already-initialized output block.
     """
+    tr = obs_trace.active()
+    if tr is None:
+        return _pack_slabs_impl(
+            input_indices, rows, values, num_rows, mode=mode,
+            input_modes=input_modes, block_rows=block_rows, tile=tile,
+            num_slabs_cap=num_slabs_cap, weights=weights)
+    with tr.span("pack.slabs", cat="kernels", mode=int(mode),
+                 nnz=len(values), num_rows=int(num_rows),
+                 block_rows=int(block_rows), tile=int(tile)) as sp:
+        p = _pack_slabs_impl(
+            input_indices, rows, values, num_rows, mode=mode,
+            input_modes=input_modes, block_rows=block_rows, tile=tile,
+            num_slabs_cap=num_slabs_cap, weights=weights)
+        sp.set(slabs=p.num_slabs, real_slabs=p.num_real_slabs,
+               pad_fraction=round(p.pad_fraction, 4))
+        return p
+
+
+def _pack_slabs_impl(
+    input_indices: np.ndarray,
+    rows: np.ndarray,
+    values: np.ndarray,
+    num_rows: int,
+    *,
+    mode: int = 0,
+    input_modes: Sequence[int] = (),
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    tile: int = DEFAULT_TILE,
+    num_slabs_cap: int | None = None,
+    weights: np.ndarray | None = None,
+) -> PackedModeLayout:
     nnz = len(values)
     if nnz and not bool(np.all(rows[:-1] <= rows[1:])):
         raise ValueError("rows must be sorted (build via core.layout)")

@@ -27,9 +27,9 @@ Usage:
 import argparse
 import dataclasses
 import json
-import time
 import traceback
 
+from ..obs import clock as obs_clock
 import numpy as np
 
 import jax
@@ -234,7 +234,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         mcommon.set_rules(**extra_rules)
 
     # 1. PROOF compile: full depth, scanned.
-    t0 = time.time()
+    t0 = obs_clock.now()
     jitted, args, state_bytes = _build(cfg, shape, mesh, quant_kv=quant_kv,
                                        microbatch=microbatch,
                                        kv_model_axis=kv_model_axis,
@@ -242,7 +242,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     with mesh:
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = obs_clock.now() - t0
     mem = compiled.memory_analysis()
 
     # 2. COST probes: small unrolled depths, affine extrapolation in L.

@@ -9,12 +9,12 @@ tokens stream back to the host one id per sequence per step.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, reduce_config
+from repro.obs import clock as obs_clock
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
@@ -53,20 +53,20 @@ def main():
         decode = jax.jit(steps_mod.make_decode_step(model),
                          donate_argnums=(1,))
 
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         logits, cache = model.prefill(params, prompts, cache, **kw)
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         jax.block_until_ready(tok)
-        t_prefill = time.perf_counter() - t0
+        t_prefill = obs_clock.now() - t0
 
         toks = [tok]
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         for _ in range(G - 1):
             nxt, cache = decode(params, cache, {"tokens": tok})
             tok = nxt[:, None]
             toks.append(tok)
         jax.block_until_ready(tok)
-        t_decode = time.perf_counter() - t0
+        t_decode = obs_clock.now() - t0
 
     print(f"[serve] {args.arch}: batch={B} prompt={P} gen={G} "
           f"kv={'int8' if args.quant_kv else 'native'}")

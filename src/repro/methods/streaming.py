@@ -61,12 +61,13 @@ increment is recorded as a per-session gauge in the service metrics
 from __future__ import annotations
 
 import itertools
-import time
 
 import numpy as np
 
 from ..core import plan as plan_mod
 from ..core.coo import SparseTensor, _linearize
+from ..obs import clock as obs_clock
+from ..obs import trace as obs_trace
 from .registry import MethodSpec, get_method, register_method
 
 _SESSION_IDS = itertools.count()
@@ -286,6 +287,11 @@ class StreamingCP:
                           count: bool = True):
         if count:
             self._latencies.append(wall_s)
+        obs_trace.event(
+            "stream.increment", cat="serve", session=self.session_id,
+            nnz=len(self._keys), bucket_cap=self._cap or len(self._keys),
+            evicted=evicted, wall_s=round(wall_s, 6),
+            merge_s=round(merge_s, 6), counted=count)
         if self.runner is not None and getattr(self.runner, "service", None):
             self.runner.service.metrics.record_stream_increment(
                 self.session_id, bucket_cap=self._cap or len(self._keys),
@@ -314,17 +320,17 @@ class StreamingCP:
             w = np.asarray(weights, np.float32)
         elif self.decay is not None:
             w = np.ones(tensor.nnz, np.float32)
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         self._shape = tuple(int(s) for s in tensor.shape)
         self._keys, self._idx, self._vals, self._entry_w = _canonical(
             tensor.indices, tensor.values, w, self._shape)
         self._cap = 0
         self._update_cap()
-        merge_s = time.perf_counter() - t0
+        merge_s = obs_clock.now() - t0
         self.merge_seconds += merge_s
         res = self._absorb(self._fit(n_iters, tol, self.seed, None))
         # register residency gauges, but the cold fit is NOT an increment
-        self._record_increment(time.perf_counter() - t0, merge_s, 0,
+        self._record_increment(obs_clock.now() - t0, merge_s, 0,
                                count=False)
         return res
 
@@ -343,7 +349,7 @@ class StreamingCP:
             raise ValueError(
                 f"increment shape {tuple(delta.shape)} != stream shape "
                 f"{self._shape}")
-        t_begin = time.perf_counter()
+        t_begin = obs_clock.now()
         w_new = None
         if weights is not None:
             self._check_weighted()
@@ -364,12 +370,12 @@ class StreamingCP:
             dk, di, dv, dw)
         evicted = self._maybe_evict()
         self._update_cap()
-        merge_s = time.perf_counter() - t_begin
+        merge_s = obs_clock.now() - t_begin
         self.merge_seconds += merge_s
         self.increments += 1
         k = self.refine_iters if refine_iters is None else int(refine_iters)
         res = self._absorb(self._fit(k, tol, self.seed, self._state))
-        self._record_increment(time.perf_counter() - t_begin, merge_s,
+        self._record_increment(obs_clock.now() - t_begin, merge_s,
                                evicted)
         return res
 

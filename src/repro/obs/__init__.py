@@ -1,0 +1,47 @@
+"""Unified telemetry: cross-layer tracing, compile/retrace accounting,
+and the cost-model-vs-measured validation harness.
+
+Three pieces, consumed by every layer of the stack:
+
+  * ``obs.trace`` — a low-overhead span/event recorder.  Choke points
+    across the stack (plan construction, slab packing, fused-sweep
+    window dispatch, batched-service flushes, distributed windows,
+    streaming increments) report into the ACTIVE tracer when one is
+    installed and pay a single ``is None`` check when none is (the
+    tracing-disabled hot path adds zero allocations per dispatch —
+    enforced by test).  Traces export as JSONL or Chrome-trace JSON
+    (viewable in ``about:tracing`` / Perfetto).
+  * ``obs.ledger`` — ONE compile/retrace ledger keyed by executable
+    cache: every jitted block builder (sequential sweep, MTTKRP replay,
+    vmapped batched, distributed shard_map) registers its executables
+    here, and per-executable trace counts expose retraces the lru
+    hit/miss counters structurally cannot see.  Resettable and
+    test-isolated (autouse fixture in tests/conftest.py).
+  * ``obs.calibrate`` + ``benchmarks/obs_bench.py`` — replays the
+    Table-3 generators per backend, joins predicted cost from the
+    GPU-architectural model against measured span durations, and emits
+    ``results/BENCH_obs.json`` (predicted-vs-observed ratio, per-mode
+    load-imbalance factor, compile-vs-steady breakdown).
+
+``python -m repro.obs.report <file>`` renders any JSONL trace, Chrome
+trace, or BENCH json as a terminal dashboard.
+
+``obs.clock`` is the one monotonic-clock front door (``perf_counter``)
+every layer times durations through; ``clock.wall`` is the epoch clock
+for timestamps only.
+
+Import discipline: this package's core (``trace``, ``ledger``,
+``clock``) depends on the stdlib only, so ``repro.core`` and
+``repro.kernels`` can import it without cycles; ``obs.calibrate`` and
+``obs.report`` import the rest of the stack and are therefore NOT
+imported here eagerly.
+"""
+from . import clock  # noqa: F401
+from .ledger import LEDGER, RetraceLedger  # noqa: F401
+from .trace import (Tracer, active, capture, disable, enable, event,  # noqa: F401
+                    load_jsonl, span, validate_chrome)
+
+__all__ = [
+    "clock", "LEDGER", "RetraceLedger", "Tracer", "active", "capture",
+    "disable", "enable", "event", "load_jsonl", "span", "validate_chrome",
+]

@@ -1,0 +1,235 @@
+"""Terminal dashboard over obs artifacts: ``python -m repro.obs.report``.
+
+Reads any mix of
+
+  * JSONL trace dumps (``Tracer.dump_jsonl`` — first line is meta),
+  * Chrome-trace JSON exports (``Tracer.dump_chrome``),
+  * ``results/BENCH_obs.json`` calibration outputs,
+
+auto-detected per file, and renders:
+
+  * a span tree with total/self wall time aggregated by name along the
+    parent chain (children's totals are subtracted from the parent's
+    self time),
+  * the retrace/compile ledger — ``ledger.compile`` instant events
+    grouped by executable-cache kind,
+  * the predicted-vs-observed and load-imbalance tables from BENCH rows.
+
+Pure stdlib; no jax import, so the dashboard works on any checkout.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+from . import trace as obs_trace
+
+_INDENT = "  "
+
+
+# ---------------------------------------------------------------------------
+# Span-tree aggregation
+# ---------------------------------------------------------------------------
+
+
+def _normalize(records: list[dict]) -> tuple[list[dict], list[dict]]:
+    """(spans, events) from either JSONL records or Chrome trace events."""
+    spans, events = [], []
+    for r in records:
+        kind = r.get("kind")
+        if kind == "span":
+            spans.append(r)
+        elif kind == "event":
+            events.append(r)
+        elif "ph" in r:                       # Chrome trace event
+            if r["ph"] == "X":
+                spans.append({
+                    "kind": "span", "id": r.get("args", {}).get("id"),
+                    "parent": r.get("args", {}).get("parent"),
+                    "name": r["name"], "cat": r.get("cat", "app"),
+                    "tid": r.get("tid", 0), "ts_us": r.get("ts", 0.0),
+                    "dur_us": r.get("dur", 0.0),
+                    "args": r.get("args", {}),
+                })
+            elif r["ph"] == "i":
+                events.append({
+                    "kind": "event", "name": r["name"],
+                    "cat": r.get("cat", "app"),
+                    "args": r.get("args", {}),
+                })
+    return spans, events
+
+
+def aggregate_tree(spans: list[dict]) -> dict:
+    """Aggregate spans by their name-path (root → ... → name).
+
+    Returns {path_tuple: {"count", "total_us", "self_us"}}; self time is
+    total minus the sum of direct children's totals, floored at zero
+    (clock granularity can make child sums overshoot).
+    """
+    by_id = {s["id"]: s for s in spans if s.get("id") is not None}
+
+    def path_of(s):
+        parts, seen = [], set()
+        cur = s
+        while cur is not None and cur["id"] not in seen:
+            seen.add(cur["id"])
+            parts.append(cur["name"])
+            cur = by_id.get(cur.get("parent"))
+        return tuple(reversed(parts))
+
+    agg: dict = defaultdict(lambda: {"count": 0, "total_us": 0.0,
+                                     "self_us": 0.0})
+    child_total: dict = defaultdict(float)
+    for s in spans:
+        p = path_of(s)
+        agg[p]["count"] += 1
+        agg[p]["total_us"] += s["dur_us"]
+        if len(p) > 1:
+            child_total[p[:-1]] += s["dur_us"]
+    for p, row in agg.items():
+        row["self_us"] = max(row["total_us"] - child_total.get(p, 0.0), 0.0)
+    return dict(agg)
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:8.3f}s "
+    if us >= 1e3:
+        return f"{us / 1e3:8.3f}ms"
+    return f"{us:8.1f}µs"
+
+
+def render_tree(spans: list[dict], out=None) -> None:
+    out = out or sys.stdout
+    agg = aggregate_tree(spans)
+    if not agg:
+        print("  (no spans)", file=out)
+        return
+    print(f"  {'total':>10}  {'self':>10}  {'count':>6}  span", file=out)
+    for path in sorted(agg, key=lambda p: (p[:1], -agg[p]["total_us"])):
+        row = agg[path]
+        name = _INDENT * (len(path) - 1) + path[-1]
+        print(f"  {_fmt_us(row['total_us'])}  {_fmt_us(row['self_us'])}"
+              f"  {row['count']:6d}  {name}", file=out)
+
+
+def render_ledger(events: list[dict], out=None) -> None:
+    """Group ledger.compile instant events (one per registered
+    executable) by kind — the trace-side view of the retrace ledger."""
+    out = out or sys.stdout
+    compiles = [e for e in events if e["name"] == "ledger.compile"]
+    if not compiles:
+        print("  (no ledger.compile events)", file=out)
+        return
+    by_kind: dict = defaultdict(list)
+    for e in compiles:
+        by_kind[e.get("args", {}).get("kind", "?")].append(
+            e.get("args", {}).get("key", "?"))
+    for kind in sorted(by_kind):
+        keys = by_kind[kind]
+        print(f"  {kind:16s} {len(keys):3d} executable(s)", file=out)
+        for k in keys:
+            print(f"    - {k}", file=out)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_obs tables
+# ---------------------------------------------------------------------------
+
+
+def render_bench(doc: dict, out=None) -> None:
+    out = out or sys.stdout
+    rows = doc.get("rows", doc if isinstance(doc, list) else [])
+    ratio = [r for r in rows if r.get("section") == "ratio"]
+    imb = [r for r in rows if r.get("section") == "imbalance"]
+    ledger = [r for r in rows if r.get("section") == "ledger"]
+    if ratio:
+        print("  predicted vs observed (per backend):", file=out)
+        print(f"    {'dataset':10s} {'backend':8s} {'pred_s':>10} "
+              f"{'meas_s':>10} {'pred/obs':>10} {'compile_s':>10} "
+              f"{'steady_s':>10}", file=out)
+        for r in ratio:
+            po = r.get("predicted_over_observed")
+            print(f"    {r['dataset']:10s} {r['backend']:8s} "
+                  f"{_num(r.get('predicted_s')):>10} "
+                  f"{_num(r.get('measured_s')):>10} "
+                  f"{_num(po):>10} "
+                  f"{_num(r.get('compile_overhead_s')):>10} "
+                  f"{_num(r.get('steady_window_s')):>10}", file=out)
+    if imb:
+        print("  load imbalance (max/mean shard time):", file=out)
+        print(f"    {'dataset':10s} {'mode':>4} {'scheme':10s} "
+              f"{'measured':>9} {'nnz-pred':>9}", file=out)
+        for r in imb:
+            for m in r.get("per_mode", []):
+                print(f"    {r['dataset']:10s} {m['mode']:4d} "
+                      f"{m['scheme']:10s} {m['measured_imbalance']:9.3f} "
+                      f"{m['nnz_imbalance']:9.3f}", file=out)
+    if ledger:
+        print("  retrace ledger:", file=out)
+        for r in ledger:
+            for k, v in sorted(r.items()):
+                if k in ("name", "section"):
+                    continue
+                print(f"    {k}: {v}", file=out)
+
+
+def _num(x) -> str:
+    if x is None:
+        return "-"
+    return f"{x:.4g}"
+
+
+# ---------------------------------------------------------------------------
+# Entry
+# ---------------------------------------------------------------------------
+
+
+def _load(path: str):
+    """('trace', spans, events) or ('bench', doc) by sniffing the file.
+    A whole-file JSON parse distinguishes single-document exports; a
+    failure means JSONL (one record per line, meta first)."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        records = [json.loads(line) for line in text.splitlines()
+                   if line.strip()]
+        spans, events = _normalize(records)
+        return ("trace", spans, events)
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        obs_trace.validate_chrome(doc)
+        spans, events = _normalize(doc["traceEvents"])
+        return ("trace", spans, events)
+    return ("bench", doc)
+
+
+def main(argv: list[str] | None = None, out=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    out = out or sys.stdout
+    if not argv or "-h" in argv or "--help" in argv:
+        print("usage: python -m repro.obs.report TRACE_OR_BENCH_FILE...",
+              file=out)
+        print(__doc__, file=out)
+        return 0 if argv else 2
+    for path in argv:
+        kind, *rest = _load(path)
+        print(f"== {path} ==", file=out)
+        if kind == "trace":
+            spans, events = rest
+            print("-- span tree --", file=out)
+            render_tree(spans, out=out)
+            print("-- compile/retrace ledger --", file=out)
+            render_ledger(events, out=out)
+        else:
+            (doc,) = rest
+            print("-- calibration --", file=out)
+            render_bench(doc, out=out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,7 +18,6 @@ Fault model (multi-pod deployment):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import numpy as np
@@ -28,6 +27,7 @@ import jax.numpy as jnp
 
 from .. import optim
 from ..checkpoint.manager import CheckpointManager
+from ..obs import clock as obs_clock
 from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
 from ..launch import shardings as shd
@@ -159,7 +159,7 @@ class ALSRunner:
         from ..core.cpd import cpd_als
 
         before = self._cache_stats()
-        t0 = time.perf_counter()
+        t0 = obs_clock.now()
         if self.mode == "batched":
             fut = self.service.submit(tensor, n_iters=n_iters, tol=tol,
                                       seed=seed, method=method,
@@ -178,7 +178,7 @@ class ALSRunner:
                 check_every=self.check_every, method=method,
                 init_state=init_state, weights=weights, verbose=verbose,
             )
-        dt = time.perf_counter() - t0
+        dt = obs_clock.now() - t0
         self._record(tensor, res, dt, before, log)
         return res
 
@@ -313,11 +313,11 @@ class Trainer:
             while self.step < num_steps:
                 batch = next(self.pipeline)
                 batch = {k: jnp.asarray(v) for k, v in batch.items()}
-                t0 = time.perf_counter()
+                t0 = obs_clock.now()
                 self.params, self.opt_state, metrics = self._jitted(
                     self.params, self.opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
-                dt = time.perf_counter() - t0
+                dt = obs_clock.now() - t0
                 self.step += 1
                 flagged = self.monitor.observe(self.step, dt)
                 rec = {"step": self.step,

@@ -53,7 +53,6 @@ stream's real skew instead of the uniform prior — see
 from __future__ import annotations
 
 import functools
-import time
 from typing import Sequence
 
 import numpy as np
@@ -68,6 +67,9 @@ from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
 from ..core.layout import build_all_mode_layouts
 from ..kernels import ops as kops
+from ..obs import clock as obs_clock
+from ..obs import trace as obs_trace
+from ..obs.ledger import LEDGER as _LEDGER
 from .buckets import pad_tensor, pad_weights
 
 _BATCH_BACKENDS = ("segment", "coo", "pallas")
@@ -150,7 +152,11 @@ def _build_batched_block(backend: str, nmodes: int, rank: int,
         active = active & ~(jnp.abs(fit - fit_ref) < tol_b)
         return (state, active, fit, done), fits
 
-    return jax.jit(run_block, donate_argnums=(0,) if donate else ())
+    return _LEDGER.register(
+        "batched_block",
+        (backend, nmodes, rank, shapes, "cap", nnz_cap, "B", batch,
+         "block", block, "method", method),
+        jax.jit(run_block, donate_argnums=(0,) if donate else ()))
 
 
 def batched_cache_stats():
@@ -367,7 +373,7 @@ class BatchedEngine:
             raise ValueError(
                 f"per-entry weights require a weighted-fit method "
                 f"(e.g. 'masked'), got method={method!r}")
-        t_start = time.perf_counter()
+        t_start = obs_clock.now()
         B = len(tensors)
         shape = tuple(int(s) for s in tensors[0].shape)
         for t in tensors:
@@ -426,6 +432,7 @@ class BatchedEngine:
         fits_dev: list = []
         host_syncs = 0
         it = 0
+        tr = obs_trace.active()
         while it < max_iters:
             k = min(self.check_every, max_iters - it)
             fn = _build_batched_block(
@@ -433,12 +440,23 @@ class BatchedEngine:
                 self.interpret, self.donate, self.solver, k, pallas_meta,
                 method,
             )
-            carry, fits_blk = fn(carry, mode_data_all, fit_data,
-                                 tol_dev, max_iters_dev)
+            # Per-window dispatch + active-mask sync: the disabled branch
+            # pays one global read and zero allocations.
+            if tr is None:
+                carry, fits_blk = fn(carry, mode_data_all, fit_data,
+                                     tol_dev, max_iters_dev)
+                any_active = bool(np.any(jax.device_get(carry[1])))
+            else:
+                with tr.span("batched.window", cat="serve",
+                             backend=self.backend, B=B, sweeps=k,
+                             method=method):
+                    carry, fits_blk = fn(carry, mode_data_all, fit_data,
+                                         tol_dev, max_iters_dev)
+                    any_active = bool(np.any(jax.device_get(carry[1])))
             fits_dev.append(fits_blk)
             it += k
             host_syncs += 1          # the only in-loop sync: the active mask
-            if not bool(np.any(jax.device_get(carry[1]))):
+            if not any_active:
                 break
 
         host_syncs += 1              # final materialization
@@ -448,7 +466,7 @@ class BatchedEngine:
         # One batched device_get for everything.
         factors_h, weights_h, done_h, fits_h = jax.device_get(
             (state[0], state[2], done, fits_cat))
-        wall = time.perf_counter() - t_start
+        wall = obs_clock.now() - t_start
 
         results = []
         for i in range(B):

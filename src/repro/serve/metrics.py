@@ -28,9 +28,15 @@ through a runner reports one ``record_stream_increment`` per update
 residency, eviction counts, increment latency p50/p99) — how the
 serving tier sees the stateful workload.
 
-Batch recording goes through the scheduler's lock, so those counters
-need no locking of their own; stream recording arrives from session
-threads outside the scheduler and carries its own lock.
+Thread safety: ServiceMetrics carries its OWN lock covering the batch /
+request / density state.  (It used to lean on the scheduler's lock,
+which left ``snapshot()`` — callable from any thread, and called by
+dashboards while the service is live — racing ``record_batch`` /
+``record_density`` mutations.)  Stream recording arrives from session
+threads outside the scheduler and keeps its separate ``_streams_lock``;
+the two locks are never held together, so no ordering constraint exists.
+A concurrent read/write stress test (tests/serve/
+test_metrics_concurrency.py) locks the discipline down.
 """
 from __future__ import annotations
 
@@ -62,6 +68,12 @@ class ServiceMetrics:
     read side."""
 
     def __init__(self, window: int = 4096):
+        # Guards every non-stream field below.  Writers (scheduler
+        # threads) and readers (snapshot from dashboard/bench threads)
+        # may run concurrently; without this lock snapshot() could see
+        # torn aggregates (e.g. completed bumped but latencies not yet
+        # extended) or race dict resizes in _density.
+        self._lock = threading.Lock()
         self.submitted = 0
         self.completed = 0
         self.batch_count = 0
@@ -83,27 +95,29 @@ class ServiceMetrics:
         self._streams: dict[str, dict] = {}
         self._streams_lock = threading.Lock()
 
-    # -- write side (called by the scheduler under its lock) ----------------
+    # -- write side (own lock; callers need hold nothing) -------------------
 
     def record_submit(self, now: float):
-        self.submitted += 1
-        if self.t_first_submit is None:
-            self.t_first_submit = now
+        with self._lock:
+            self.submitted += 1
+            if self.t_first_submit is None:
+                self.t_first_submit = now
 
     def record_batch(self, event: BatchEvent, latencies_s: list[float],
                      now: float):
-        self.batches.append(event)
-        self.batch_count += 1
-        self.completed += event.batch_size
-        self.latencies_s.extend(latencies_s)
-        self.t_last_complete = now
-        self._real_nnz += event.real_nnz
-        self._padded_nnz += event.padded_nnz
-        self._cache_hits += event.cache_hits
-        self._cache_misses += event.cache_misses
-        if event.max_batch:
-            self._occupancy_sum += event.batch_size / event.max_batch
-        self._triggers[event.trigger] += 1
+        with self._lock:
+            self.batches.append(event)
+            self.batch_count += 1
+            self.completed += event.batch_size
+            self.latencies_s.extend(latencies_s)
+            self.t_last_complete = now
+            self._real_nnz += event.real_nnz
+            self._padded_nnz += event.padded_nnz
+            self._cache_hits += event.cache_hits
+            self._cache_misses += event.cache_misses
+            if event.max_batch:
+                self._occupancy_sum += event.batch_size / event.max_batch
+            self._triggers[event.trigger] += 1
 
     def record_density(self, bucket_key: tuple,
                        profiles: tuple[tuple[float, ...] | None, ...]):
@@ -111,20 +125,22 @@ class ServiceMetrics:
         profiles into the bucket's running estimate.  A ``None`` profile
         (mode too large to profile cheaply) leaves that mode on the
         uniform prior."""
-        cur = self._density.get(bucket_key)
-        if cur is None:
-            self._density[bucket_key] = [
-                None if p is None else np.asarray(p, dtype=np.float64)
-                for p in profiles]
-            return
-        for d, p in enumerate(profiles):
-            if p is None:
-                continue
-            if cur[d] is None:
-                cur[d] = np.asarray(p, dtype=np.float64)
-            else:
-                cur[d] = ((1.0 - _DENSITY_EWMA) * cur[d]
-                          + _DENSITY_EWMA * np.asarray(p, dtype=np.float64))
+        with self._lock:
+            cur = self._density.get(bucket_key)
+            if cur is None:
+                self._density[bucket_key] = [
+                    None if p is None else np.asarray(p, dtype=np.float64)
+                    for p in profiles]
+                return
+            for d, p in enumerate(profiles):
+                if p is None:
+                    continue
+                if cur[d] is None:
+                    cur[d] = np.asarray(p, dtype=np.float64)
+                else:
+                    cur[d] = (
+                        (1.0 - _DENSITY_EWMA) * cur[d]
+                        + _DENSITY_EWMA * np.asarray(p, dtype=np.float64))
 
     def row_density(self, bucket_key: tuple) -> tuple | None:
         """Quantized per-mode density profiles for ``plan_bucket`` (None
@@ -132,17 +148,18 @@ class ServiceMetrics:
         never profiled).  Quantizing to a 1/16 grid keeps the profile
         hashable AND bounds the number of distinct plans (hence
         executables) a drifting stream can induce."""
-        cur = self._density.get(bucket_key)
-        if cur is None:
-            return None
-        out = []
-        for p in cur:
-            if p is None:
-                out.append(None)
-                continue
-            q = np.round(p / _DENSITY_QUANTUM) * _DENSITY_QUANTUM
-            out.append(tuple(float(x) for x in q))
-        return tuple(out)
+        with self._lock:
+            cur = self._density.get(bucket_key)
+            if cur is None:
+                return None
+            out = []
+            for p in cur:
+                if p is None:
+                    out.append(None)
+                    continue
+                q = np.round(p / _DENSITY_QUANTUM) * _DENSITY_QUANTUM
+                out.append(tuple(float(x) for x in q))
+            return tuple(out)
 
     def record_stream_increment(self, session_id: str, *, bucket_cap: int,
                                 nnz: int, evicted: int, wall_s: float,
@@ -173,33 +190,43 @@ class ServiceMetrics:
     # -- read side ----------------------------------------------------------
 
     def snapshot(self) -> dict:
-        lat = np.asarray(self.latencies_s, dtype=np.float64)
-        real, padded = self._real_nnz, self._padded_nnz
-        hits, misses = self._cache_hits, self._cache_misses
-        span = 0.0
-        if self.t_first_submit is not None and self.t_last_complete is not None:
-            span = max(self.t_last_complete - self.t_first_submit, 0.0)
-        return {
-            "submitted": self.submitted,
-            "completed": self.completed,
-            "batches": self.batch_count,
-            "throughput_rps": self.completed / span if span > 0 else 0.0,
-            "latency_p50_s": float(np.percentile(lat, 50)) if lat.size else 0.0,
-            "latency_p99_s": float(np.percentile(lat, 99)) if lat.size else 0.0,
-            # fraction of device nnz-slots spent on zero padding
-            "padding_overhead": (padded - real) / padded if padded else 0.0,
-            "batch_occupancy": (self._occupancy_sum / self.batch_count
-                                if self.batch_count else 0.0),
-            "cache_hits": hits,
-            "cache_misses": misses,
-            "cache_hit_rate": hits / (hits + misses) if hits + misses else 0.0,
-            "density_tracked_buckets": len(self._density),
-            "flush_triggers": {
-                t: self._triggers.get(t, 0)
-                for t in ("max_batch", "max_wait", "aging", "forced")
-            },
-            "streams": self._stream_snapshot(),
-        }
+        # Main state under self._lock; the stream gauges are appended
+        # after releasing it (their own lock) so the two are never
+        # nested.
+        with self._lock:
+            lat = np.asarray(self.latencies_s, dtype=np.float64)
+            real, padded = self._real_nnz, self._padded_nnz
+            hits, misses = self._cache_hits, self._cache_misses
+            span = 0.0
+            if (self.t_first_submit is not None
+                    and self.t_last_complete is not None):
+                span = max(self.t_last_complete - self.t_first_submit, 0.0)
+            out = {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "batches": self.batch_count,
+                "throughput_rps": self.completed / span if span > 0 else 0.0,
+                "latency_p50_s": (float(np.percentile(lat, 50))
+                                  if lat.size else 0.0),
+                "latency_p99_s": (float(np.percentile(lat, 99))
+                                  if lat.size else 0.0),
+                # fraction of device nnz-slots spent on zero padding
+                "padding_overhead": (padded - real) / padded if padded
+                else 0.0,
+                "batch_occupancy": (self._occupancy_sum / self.batch_count
+                                    if self.batch_count else 0.0),
+                "cache_hits": hits,
+                "cache_misses": misses,
+                "cache_hit_rate": (hits / (hits + misses)
+                                   if hits + misses else 0.0),
+                "density_tracked_buckets": len(self._density),
+                "flush_triggers": {
+                    t: self._triggers.get(t, 0)
+                    for t in ("max_batch", "max_wait", "aging", "forced")
+                },
+            }
+        out["streams"] = self._stream_snapshot()
+        return out
 
     def _stream_snapshot(self) -> dict:
         with self._streams_lock:

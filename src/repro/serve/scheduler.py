@@ -35,7 +35,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable
 
 import numpy as np
@@ -43,6 +42,8 @@ import numpy as np
 from ..core import plan as plan_mod
 from ..core.coo import SparseTensor
 from ..core.cpd import CPDResult
+from ..obs import clock as obs_clock
+from ..obs import trace as obs_trace
 from .batched_engine import BatchedEngine, batched_cache_stats
 from .buckets import Bucket, BucketPolicy
 from .metrics import BatchEvent, ServiceMetrics
@@ -113,7 +114,7 @@ class BatchScheduler:
                  max_wait_s: float = 0.005,
                  batch_quantum: int = 1,
                  metrics: ServiceMetrics | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = obs_clock.now):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if batch_quantum < 1 or batch_quantum > max_batch:
@@ -267,31 +268,42 @@ class BatchScheduler:
         q = self.batch_quantum
         target = min(self.max_batch, -(-len(batch) // q) * q)
         exec_batch = batch + [batch[-1]] * (target - len(batch))
-        t0 = time.perf_counter()
-        try:
-            results = self.engine.decompose_batch(
-                [p.tensor for p in exec_batch],
-                n_iters=[p.n_iters for p in exec_batch],
-                tol=[p.tol for p in exec_batch],
-                seeds=[p.seed for p in exec_batch],
-                nnz_cap=bucket.nnz_cap,
-                method=bucket.method,
-                init_states=[p.init_state for p in exec_batch],
-                density=density,
-                weights=[p.weights for p in exec_batch],
-            )
-        except BaseException as exc:
-            # Executor semantics: the failure belongs to the batch's own
-            # futures (raised from their result()), never to whichever
-            # caller's submit/poll happened to trigger the flush — a
-            # submitter must still receive its future for an unrelated
-            # bucket's engine error.
-            for p in batch:
-                p.future._resolve(None, exc)
-            return
-        wall = time.perf_counter() - t0
+        t0 = obs_clock.now()
+        # The flush span carries the executable-cache hit/miss deltas as
+        # attrs, so a trace ALONE reconstructs the stream's cache hit
+        # rate (cross-checked against ServiceMetrics in tests/obs).
+        with obs_trace.span("serve.flush", cat="serve",
+                            bucket=str(bucket.key), batch=len(batch),
+                            dispatched=len(exec_batch),
+                            trigger=trigger) as sp:
+            try:
+                results = self.engine.decompose_batch(
+                    [p.tensor for p in exec_batch],
+                    n_iters=[p.n_iters for p in exec_batch],
+                    tol=[p.tol for p in exec_batch],
+                    seeds=[p.seed for p in exec_batch],
+                    nnz_cap=bucket.nnz_cap,
+                    method=bucket.method,
+                    init_states=[p.init_state for p in exec_batch],
+                    density=density,
+                    weights=[p.weights for p in exec_batch],
+                )
+            except BaseException as exc:
+                # Executor semantics: the failure belongs to the batch's
+                # own futures (raised from their result()), never to
+                # whichever caller's submit/poll happened to trigger the
+                # flush — a submitter must still receive its future for
+                # an unrelated bucket's engine error.
+                sp.set(error=type(exc).__name__)
+                for p in batch:
+                    p.future._resolve(None, exc)
+                return
+            wall = obs_clock.now() - t0
+            stats1 = batched_cache_stats()
+            sp.set(wall_s=wall,
+                   cache_hits=stats1["hits"] - stats0["hits"],
+                   cache_misses=stats1["misses"] - stats0["misses"])
         now = self.clock()
-        stats1 = batched_cache_stats()
         for p, res in zip(batch, results):
             p.future._resolve(res)
         # Per-mode observed row-density of this batch (unpadded tensors),
@@ -339,7 +351,7 @@ class DecompositionService:
                  backend: str = "segment", check_every: int = 4,
                  policy: BucketPolicy | None = None, max_batch: int = 8,
                  max_wait_s: float = 0.005, batch_quantum: int = 1,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = obs_clock.now):
         self.engine = BatchedEngine(rank, kappa=kappa, backend=backend,
                                     check_every=check_every)
         self.metrics = ServiceMetrics()

@@ -4,7 +4,22 @@
 import numpy as np
 import pytest
 
+from repro.obs import trace as obs_trace
+from repro.obs.ledger import LEDGER
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _obs_isolation():
+    """Observability state is test-isolated: the retrace ledger
+    re-baselines before each test (so trace-count assertions measure
+    only that test's work — no module-global counter leaks across
+    tests), and any tracer a test enabled is torn down after it."""
+    LEDGER.reset()
+    yield
+    obs_trace.disable()
+    LEDGER.reset()

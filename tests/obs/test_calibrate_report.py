@@ -1,0 +1,131 @@
+"""Calibration harness + report dashboard on tiny tensors (jax work is
+CI-sized; the full Table-3 replay lives in benchmarks/obs_bench.py)."""
+import io
+import json
+
+import pytest
+
+from repro.core import random_sparse
+from repro.obs import calibrate, report, trace as obs_trace
+
+SHAPE = (12, 9, 7)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return random_sparse(SHAPE, 120, seed=5)
+
+
+def test_calibrate_tensor_rows(tiny):
+    with obs_trace.capture() as tr:
+        rows = calibrate.calibrate_tensor(
+            "tiny", tiny, rank=3, backends=("segment",),
+            predict_fn=lambda t, d, b: 1e-6,
+            kappa=4, reps=1, imbalance_reps=2)
+    ratio = [r for r in rows if r["section"] == "ratio"]
+    imb = [r for r in rows if r["section"] == "imbalance"]
+    assert len(ratio) == 1 and len(imb) == 1
+
+    r = ratio[0]
+    assert r["backend"] == "segment" and r["dataset"] == "tiny"
+    assert r["measured_s"] > 0.0
+    assert r["predicted_s"] == pytest.approx(1e-6 * tiny.nmodes)
+    assert r["predicted_over_observed"] == pytest.approx(
+        r["predicted_s"] / r["measured_s"])
+    assert len(r["per_mode"]) == tiny.nmodes
+    for m in r["per_mode"]:
+        assert m["measured_s"] > 0.0 and m["ratio"] > 0.0
+    # compile split: the cold window includes trace+compile
+    assert r["cold_window_s"] >= r["steady_window_s"] > 0.0
+    assert r["compile_overhead_s"] >= 0.0
+
+    i = imb[0]
+    assert i["kappa"] == 4
+    assert len(i["per_mode"]) == tiny.nmodes
+    for m in i["per_mode"]:
+        assert m["measured_imbalance"] >= 1.0 - 1e-9
+        assert m["nnz_imbalance"] >= 1.0 - 1e-9
+        assert len(m["shard_nnz"]) == 4
+        assert sum(m["shard_nnz"]) == tiny.nnz
+
+    # the measured numbers came THROUGH the tracer
+    names = {r["name"] for r in tr.records() if r["kind"] == "span"}
+    assert {"calibrate.mode_mttkrp", "calibrate.imbalance",
+            "als.window"} <= names
+
+
+def test_measure_compile_steady_requires_tracer(tiny):
+    with pytest.raises(RuntimeError, match="active tracer"):
+        calibrate.measure_compile_steady(tiny, 2, "segment")
+
+
+def test_mode_seconds_without_tracer_falls_back(tiny):
+    assert obs_trace.active() is None
+    out = calibrate.measure_mode_seconds(tiny, 2, "segment", reps=1)
+    assert len(out) == tiny.nmodes and all(s > 0 for s in out)
+
+
+# ---------------------------------------------------------------------------
+# report rendering
+# ---------------------------------------------------------------------------
+
+
+def _sample_tracer():
+    tr = obs_trace.Tracer("rep")
+    with tr.span("outer", cat="t"):
+        tr.event("ledger.compile", cat="compile", kind="sweep_block",
+                 key="(k)")
+        with tr.span("inner", cat="t"):
+            pass
+        with tr.span("inner", cat="t"):
+            pass
+    return tr
+
+
+def test_aggregate_tree_self_total():
+    tr = _sample_tracer()
+    spans = [r for r in tr.records() if r["kind"] == "span"]
+    agg = report.aggregate_tree(spans)
+    assert agg[("outer",)]["count"] == 1
+    assert agg[("outer", "inner")]["count"] == 2
+    # self = total - children's totals, floored at 0
+    outer = agg[("outer",)]
+    inner = agg[("outer", "inner")]
+    assert outer["self_us"] == pytest.approx(
+        max(outer["total_us"] - inner["total_us"], 0.0))
+
+
+def test_report_main_renders_all_artifact_kinds(tmp_path):
+    tr = _sample_tracer()
+    jsonl = tmp_path / "t.jsonl"
+    chrome = tmp_path / "t.trace.json"
+    bench = tmp_path / "BENCH_obs.json"
+    tr.dump_jsonl(jsonl)
+    tr.dump_chrome(str(chrome))
+    bench.write_text(json.dumps({"rows": [
+        {"name": "obs/x/segment", "section": "ratio", "dataset": "x",
+         "backend": "segment", "predicted_s": 1e-3, "measured_s": 2e-3,
+         "predicted_over_observed": 0.5, "compile_overhead_s": 0.1,
+         "steady_window_s": 0.01},
+        {"name": "obs/x/imbalance", "section": "imbalance", "dataset": "x",
+         "per_mode": [{"mode": 0, "scheme": "NNZ_PARTITION",
+                       "measured_imbalance": 1.2, "nnz_imbalance": 1.0}]},
+        {"name": "obs/ledger", "section": "ledger", "blocks": 3,
+         "traces": 3, "expected_max_traces": 3},
+    ]}))
+    out = io.StringIO()
+    rc = report.main([str(jsonl), str(chrome), str(bench)], out=out)
+    text = out.getvalue()
+    assert rc == 0
+    assert text.count("-- span tree --") == 2      # jsonl + chrome
+    assert "  inner" in text                       # indented child
+    assert "sweep_block" in text                   # ledger section
+    assert "pred/obs" in text or "predicted vs observed" in text
+    assert "0.5" in text and "1.200" in text
+    assert "expected_max_traces: 3" in text
+
+
+def test_report_help():
+    out = io.StringIO()
+    assert report.main([], out=out) == 2
+    assert "usage:" in out.getvalue()

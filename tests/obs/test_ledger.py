@@ -1,0 +1,135 @@
+"""Retrace-ledger semantics + the acceptance cross-check: the streaming
+session cache-hit story is reconstructible from trace spans alone and
+agrees exactly with ServiceMetrics."""
+import numpy as np
+import pytest
+
+from repro.core import SparseTensor, random_sparse
+from repro.obs import trace as obs_trace
+from repro.obs.ledger import LEDGER, RetraceLedger
+from repro.runtime import ALSRunner
+
+SHAPE = (10, 8, 6)
+
+
+class _FakeJit:
+    """Mimics jax's version-private trace-count introspection."""
+
+    def __init__(self, n=0):
+        self.n = n
+
+    def _cache_size(self):
+        return self.n
+
+
+def test_register_stats_and_reset_rebaseline():
+    led = RetraceLedger()
+    f = _FakeJit()
+    assert led.register("k", ("a", 1), f) is f
+    s = led.stats("k")
+    assert s == {"blocks": 1, "blocks_new": 1, "traces": 0}
+    f.n = 3
+    assert led.stats("k")["traces"] == 3
+    led.reset()
+    s = led.stats("k")
+    assert s["traces"] == 0 and s["blocks_new"] == 0
+    assert s["blocks"] == 1            # entries survive reset
+    f.n = 5                            # 2 retraces since re-baseline
+    assert led.stats("k")["traces"] == 2
+
+
+def test_stats_none_without_introspection():
+    led = RetraceLedger()
+    led.register("k", "key", object())   # no _cache_size attr
+    assert led.stats("k")["traces"] is None
+    # one introspectable fn is enough to report a number again
+    f = led.register("k", "key2", _FakeJit())
+    f.n = 1
+    assert led.stats("k")["traces"] == 1
+
+
+def test_kind_scoping_and_entries():
+    led = RetraceLedger()
+    led.register("a", "x", _FakeJit())
+    fb = led.register("b", "y", _FakeJit())
+    fb.n = 2      # two traces after registration
+    assert led.kinds() == ["a", "b"]
+    assert led.stats("a")["blocks"] == 1
+    assert led.stats()["blocks"] == 2
+    rows = led.entries("b")
+    assert rows == [{"kind": "b", "key": "y", "traces": 2}]
+
+
+def test_isolated_scopes_deltas():
+    led = RetraceLedger()
+    f = _FakeJit()
+    led.register("k", "x", f)
+    f.n = 4
+    with led.isolated():
+        assert led.stats("k")["traces"] == 0   # entry reset
+        f.n = 6
+        assert led.stats("k")["traces"] == 2
+    assert led.stats("k")["traces"] == 0       # exit reset
+
+
+def test_registration_emits_compile_event():
+    with obs_trace.capture() as tr:
+        RetraceLedger().register("demo", ("t", 1), _FakeJit())
+    (ev,) = tr.records()
+    assert ev["kind"] == "event" and ev["name"] == "ledger.compile"
+    assert ev["args"] == {"kind": "demo", "key": "('t', 1)"}
+
+
+def test_autouse_fixture_rebaselines_global_ledger():
+    """The conftest fixture reset() means this test sees zero deltas
+    from whatever ran before it."""
+    s = LEDGER.stats()
+    assert s["blocks_new"] == 0
+    assert s["traces"] in (0, None)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: session hit-rate from spans alone == ServiceMetrics
+# ---------------------------------------------------------------------------
+
+
+def test_streaming_hit_rate_reconstructible_from_spans():
+    """PR 6's zero-retrace streaming numbers, re-derived two independent
+    ways: (a) summing the cache_hits/cache_misses attrs the scheduler
+    stamps on its serve.flush spans, (b) ServiceMetrics' own counters.
+    They must agree exactly — and warm increments must actually hit."""
+    t = random_sparse(SHAPE, 130, seed=61)
+    with obs_trace.capture("acceptance") as tr:
+        runner = ALSRunner(2, check_every=2)
+        s = runner.open_stream(refine_iters=2, session_id="probe")
+        s.start(SparseTensor(t.indices[:60], t.values[:60], SHAPE),
+                n_iters=2, tol=-1.0)
+        s.update(SparseTensor(t.indices[60:95], t.values[60:95], SHAPE))
+        s.update(SparseTensor(t.indices[95:], t.values[95:], SHAPE))
+        snap = runner.service.snapshot()
+
+    flush = [r for r in tr.records()
+             if r["kind"] == "span" and r["name"] == "serve.flush"]
+    assert flush, "scheduler emitted no serve.flush spans"
+    hits = sum(r["args"]["cache_hits"] for r in flush)
+    misses = sum(r["args"]["cache_misses"] for r in flush)
+    assert hits == snap["cache_hits"]
+    assert misses == snap["cache_misses"]
+    rate = hits / (hits + misses) if hits + misses else 0.0
+    assert rate == pytest.approx(snap["cache_hit_rate"])
+    # bucket-quantized sessions: the warm (second/third) increments
+    # reuse the executable, so spans alone must show real hits
+    assert hits > 0
+    # each flush span also carries its wall time and dispatch size
+    for r in flush:
+        assert r["args"]["wall_s"] >= 0.0
+        assert r["args"]["batch"] >= 1
+    # and the session increments show up as stream.increment events
+    # (start emits one too, with counted=False — updates only count)
+    incs = [r for r in tr.records()
+            if r["kind"] == "event" and r["name"] == "stream.increment"]
+    counted = [e for e in incs if e["args"]["counted"]]
+    assert len(incs) == 3
+    assert len(counted) == 2 == s.increments
+    assert all(e["args"]["session"] == "probe" for e in incs)
+    np.testing.assert_array_less(0, [e["args"]["nnz"] for e in incs])

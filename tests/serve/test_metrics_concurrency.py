@@ -1,0 +1,93 @@
+"""ServiceMetrics is written by scheduler threads while dashboards read
+snapshots: hammer both sides concurrently and require exact final
+totals and never-torn intermediate snapshots."""
+import threading
+
+import numpy as np
+
+from repro.serve.metrics import BatchEvent, ServiceMetrics
+
+N_WRITERS = 4
+BATCHES_PER_WRITER = 200
+
+
+def _event(i: int) -> BatchEvent:
+    return BatchEvent(
+        bucket_key=("b", i % 3), batch_size=2, max_batch=4,
+        real_nnz=10, padded_nnz=16, wall_s=0.001,
+        trigger="max_batch" if i % 2 else "max_wait",
+        cache_hits=1, cache_misses=1)
+
+
+def test_concurrent_writers_and_readers_exact_totals():
+    m = ServiceMetrics(window=N_WRITERS * BATCHES_PER_WRITER + 10)
+    stop = threading.Event()
+    errors: list[str] = []
+
+    def writer(wid: int):
+        for i in range(BATCHES_PER_WRITER):
+            m.record_submit(now=float(i))
+            m.record_submit(now=float(i))
+            m.record_batch(_event(i), [0.001, 0.002], now=float(i) + 0.5)
+            m.record_density(("b", i % 3),
+                             ((0.5, 0.25), None, (1.0,)))
+
+    def reader():
+        while not stop.is_set():
+            snap = m.snapshot()
+            # never torn: completed tracks batches exactly 2:1, and the
+            # hit-rate is always computed from a consistent pair
+            if snap["completed"] != 2 * snap["batches"]:
+                errors.append(
+                    f"torn: completed={snap['completed']} "
+                    f"batches={snap['batches']}")
+            hits, misses = snap["cache_hits"], snap["cache_misses"]
+            if hits != misses:   # writers bump them together under lock
+                errors.append(f"torn: hits={hits} misses={misses}")
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = [threading.Thread(target=writer, args=(w,))
+               for w in range(N_WRITERS)]
+    for th in readers + writers:
+        th.start()
+    for th in writers:
+        th.join()
+    stop.set()
+    for th in readers:
+        th.join()
+
+    assert not errors, errors[:5]
+    total = N_WRITERS * BATCHES_PER_WRITER
+    snap = m.snapshot()
+    assert snap["submitted"] == 2 * total
+    assert snap["completed"] == 2 * total
+    assert snap["batches"] == total
+    assert snap["cache_hits"] == total
+    assert snap["cache_misses"] == total
+    assert snap["cache_hit_rate"] == 0.5
+    assert snap["flush_triggers"]["max_batch"] + \
+        snap["flush_triggers"]["max_wait"] == total
+    assert snap["batch_occupancy"] == 0.5
+
+
+def test_concurrent_density_folds_stay_finite():
+    m = ServiceMetrics()
+    key = ("bucket", 0)
+    rng = np.random.default_rng(0)
+    profiles = [tuple(rng.uniform(0.1, 1.0, 4)) for _ in range(8)]
+
+    def fold(p):
+        for _ in range(100):
+            m.record_density(key, (p, p, None))
+
+    threads = [threading.Thread(target=fold, args=(p,)) for p in profiles]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    prof = m.row_density(key)
+    assert prof is not None
+    for d in (0, 1):
+        vals = np.asarray(prof[d])
+        assert np.all(np.isfinite(vals))
+        assert np.all(vals >= 0)

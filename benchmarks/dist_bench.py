@@ -16,12 +16,18 @@ parses its CSV back out.  Measured per Table-3-style tensor:
   * a masked/weighted completion row (``method="masked"`` with
     fractional observation confidences): per-shard residual scatter,
     psum of partial valued MTTKRPs, weighted sharded fit — the
-    distributed path of the weighted-observations front door.
+    distributed path of the weighted-observations front door;
+  * per-tensor collective-payload accounting: bytes moved per sweep by
+    the full-array psum vs the scheme-1 row-sharded all-gather
+    (``collective="gather"``), with an fp32 agreement check between the
+    two collectives.
 
-Output: ``name,us_per_call,derived`` CSV like the other sections.
+Output: ``name,us_per_call,derived`` CSV like the other sections, plus
+``ROW {json}`` lines the runner stores as BENCH_dist.json rows.
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -30,10 +36,16 @@ import textwrap
 DEVICES = 8
 
 _CHILD = """
+    import json
     import time
     import numpy as np
     from repro.core import cpd_als, random_sparse
-    from repro.core.distributed import cpd_als_distributed, make_distributed_plan
+    from repro.core.distributed import (
+        collective_payload_bytes, cpd_als_distributed,
+        make_distributed_plan, resolve_collectives)
+
+    def row(r):
+        print("ROW " + json.dumps(r))
 
     ITERS, CHECK = 6, 3
     for name, shape, nnz in (("uber-like", (60, 24, 160), 2000),
@@ -65,6 +77,32 @@ _CHILD = """
               f"fit={dist.fits[-1]:.4f};"
               f"syncs_per_iter={dist.host_syncs / ITERS:.2f};"
               f"schemes={schemes}")
+        row({"name": f"dist/{name}", "section": "als",
+             "single_us_per_iter": single_s / ITERS * 1e6,
+             "dist_us_per_iter": dist_s / ITERS * 1e6,
+             "fit": float(dist.fits[-1]),
+             "syncs_per_iter": dist.host_syncs / ITERS,
+             "schemes": schemes})
+
+        # Collective payload: scheme-1 modes swap the full (I_d, R) psum
+        # for an all-gather of each device's owned row slice (+ int32
+        # destination map); the gather run must agree with psum to fp32.
+        cols = resolve_collectives(plan, "gather")
+        psum_b = collective_payload_bytes(plan, 8, None)
+        gath_b = collective_payload_bytes(plan, 8, cols)
+        if cols is not None:
+            g = cpd_als_distributed(t, rank=8, plan=plan, n_iters=ITERS,
+                                    tol=-1.0, check_every=CHECK,
+                                    collective="gather")
+            assert abs(g.fits[-1] - dist.fits[-1]) < 1e-3, (
+                g.fits[-1], dist.fits[-1])
+        row({"name": f"dist/{name}/collective", "section": "collective",
+             "collectives": list(cols) if cols is not None else None,
+             "psum_payload_bytes": psum_b,
+             "gather_payload_bytes": gath_b,
+             "payload_ratio": psum_b / gath_b if gath_b else None})
+        print(f"dist/{name}/collective,0,psum_B={psum_b};"
+              f"gather_B={gath_b};ratio={psum_b / max(gath_b, 1):.2f}")
 
     # Masked/weighted completion under shard_map: per-shard residual
     # scatter + psum of partial valued MTTKRPs, weighted sharded fit.
@@ -85,6 +123,10 @@ _CHILD = """
     print(f"dist/masked-weighted/shard_map-8dev,{dist_s / ITERS * 1e6:.0f},"
           f"fit={dist.fits[-1]:.4f};single_fit={single.fits[-1]:.4f};"
           f"syncs_per_iter={dist.host_syncs / ITERS:.2f}")
+    row({"name": "dist/masked-weighted", "section": "als",
+         "dist_us_per_iter": dist_s / ITERS * 1e6,
+         "fit": float(dist.fits[-1]),
+         "syncs_per_iter": dist.host_syncs / ITERS})
 """
 
 
@@ -103,9 +145,15 @@ def run(devices: int = DEVICES) -> str:
     return out.stdout
 
 
-def main():
+def main() -> list[dict]:
     print("name,us_per_call,derived")
-    print(run(), end="")
+    rows = []
+    for line in run().splitlines():
+        if line.startswith("ROW "):
+            rows.append(json.loads(line[4:]))
+        else:
+            print(line)
+    return rows
 
 
 if __name__ == "__main__":

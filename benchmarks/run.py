@@ -52,7 +52,7 @@ def emit_json(name: str, wall_s: float, rows, config: dict) -> pathlib.Path:
 
 
 _SECTIONS = ("table3", "fig3", "fig4", "fig5", "kernel", "als", "serve",
-             "methods", "dist", "roofline", "obs")
+             "methods", "dist", "pod", "roofline", "obs")
 _FLAGS = ("--smoke",)
 
 # The streaming row once buried a 370x retrace regression behind a bare
@@ -100,6 +100,40 @@ def _check_obs_rows(rows) -> None:
     if traces is not None and traces > ceiling:
         sys.exit(f"retrace ledger over ceiling: {traces} traces for "
                  f"{ceiling} executables — a jit cache is re-specializing")
+
+
+# The pod section's witnesses: a multi-window run costs ONE dispatch
+# (host_syncs == 1, exactly one pod.dispatch span), the double-buffered
+# stream hid some host assembly behind device compute (overlap fraction
+# > 0), and the pod-block executables stayed under the retrace ceiling.
+def _check_pod_rows(rows) -> None:
+    rows = [r for r in (rows or []) if isinstance(r, dict)]
+    by_name = {r.get("name"): r for r in rows}
+    disp = by_name.get("pod/one-dispatch")
+    if not disp:
+        sys.exit("pod section produced no 'pod/one-dispatch' row")
+    if disp.get("pod_dispatch_spans") != 1 or disp.get("host_syncs") != 1:
+        sys.exit(f"pod multi-window run was not one dispatch: {disp}")
+    if not disp.get("windows", 0) > 1:
+        sys.exit(f"pod dispatch ran {disp.get('windows')} windows — the "
+                 f"one-dispatch witness needs a MULTI-window run")
+    over = by_name.get("pod/overlap")
+    if not over:
+        sys.exit("pod section produced no 'pod/overlap' row")
+    if not (isinstance(over.get("overlap_fraction"), float)
+            and over["overlap_fraction"] > 0.0):
+        sys.exit(f"double-buffered stream showed no assembly/compute "
+                 f"overlap: {over}")
+    agree = by_name.get("pod/agreement")
+    if not agree or not agree.get("max_fit_err", 1.0) < 1e-3:
+        sys.exit(f"pod vs single-device agreement failed: {agree}")
+    led = by_name.get("pod/ledger")
+    if not led:
+        sys.exit("pod section produced no 'pod/ledger' row")
+    traces, ceiling = led.get("traces"), led.get("expected_max_traces")
+    if traces is not None and traces > ceiling:
+        sys.exit(f"pod-block retrace ledger over ceiling: {traces} traces "
+                 f"for {ceiling} executables")
 
 
 def main() -> None:
@@ -162,6 +196,14 @@ def main() -> None:
         # at first init, so the 8-device mesh cannot share this process
         sections.append(("dist", "distributed ALS smoke (shard_map, 8 "
                          "virtual devices)", dist_bench.main))
+    if on("pod"):
+        from . import pod_bench
+        # subprocess like dist: the 8-device batch mesh cannot share a
+        # process whose jax already pinned its device count
+        sections.append(("pod", "pod serving (mesh-sharded batch, "
+                         "on-device convergence, double-buffered dispatch)",
+                         lambda: pod_bench.main(["--smoke"] if smoke
+                                                else [])))
     if on("roofline"):
         from . import roofline
         sections.append(("roofline", "roofline table (from dry-run)",
@@ -182,6 +224,8 @@ def main() -> None:
             _check_methods_rows(rows if isinstance(rows, list) else None)
         if name == "obs":
             _check_obs_rows(rows if isinstance(rows, list) else None)
+        if name == "pod":
+            _check_pod_rows(rows if isinstance(rows, list) else None)
         path = emit_json(name, wall, rows if isinstance(rows, list) else None,
                          {"argv": argv, "smoke": smoke})
         print(f"===== done in {wall:.1f}s -> {path.relative_to(path.parents[1])} =====")

@@ -106,13 +106,22 @@ def resolve_solver(solver: str) -> str:
 
 def _build_one_mttkrp(backend: str, nmodes: int, shapes: tuple[int, ...],
                       pallas_meta: tuple | None, interpret: bool,
-                      axis: str | None):
+                      axis: str | None,
+                      collectives: tuple[str, ...] | None = None):
     """``one_mttkrp(d, mode_data, factors) -> (I_d, R)`` with values baked
     into the mode data (the CP layout contract):
 
       segment: (idx, rows, vals, row_perm)
       pallas:  (rb_of, first, idx_packed, vals_packed, lrows_packed, row_perm)
       coo:     (indices, values)
+
+    ``collectives`` (distributed segment path only): per-mode choice of
+    how partial outputs combine across ``axis`` — "psum" (the default,
+    works for both partition schemes) or "gather" (scheme 1 only: each
+    device all-gathers just its OWNED row slice and scatters through the
+    gathered destination map, moving ~1/kappa of the psum payload; mode
+    data widens to ``(idx, rows, vals, row_perm, own_rows, gather_dst)``,
+    see ``core.plan.DeviceShards.own_rows``).
     """
     in_modes = [tuple(w for w in range(nmodes) if w != d)
                 for d in range(nmodes)]
@@ -120,6 +129,24 @@ def _build_one_mttkrp(backend: str, nmodes: int, shapes: tuple[int, ...],
     def one_mttkrp(d, mode_data, factors):
         """(I_d, R) f32 in ORIGINAL row order, entirely on device."""
         if backend == "segment":
+            if (axis is not None and collectives is not None
+                    and collectives[d] == "gather"):
+                idx, rows, vals, row_perm, own_rows, gather_dst = mode_data
+                out = kref.mttkrp_sorted_segments(
+                    idx, rows, vals,
+                    [factors[w] for w in in_modes[d]], shapes[d]
+                )
+                # Scheme-1 partials have support only on this device's
+                # owned relabeled rows: gather those slices plus their
+                # original-row destinations and scatter into a buffer
+                # with one dummy row (I_d) absorbing the padding slots.
+                own = out[own_rows]                        # (rows_cap, R)
+                g_vals = lax.all_gather(own, axis)         # (κ, cap, R)
+                g_dst = lax.all_gather(gather_dst, axis)   # (κ, cap)
+                full = jnp.zeros((shapes[d] + 1, out.shape[-1]), out.dtype)
+                full = full.at[g_dst.reshape(-1)].set(
+                    g_vals.reshape(-1, out.shape[-1]))
+                return full[: shapes[d]]
             idx, rows, vals, row_perm = mode_data
             out = kref.mttkrp_sorted_segments(
                 idx, rows, vals, [factors[w] for w in in_modes[d]], shapes[d]
@@ -386,7 +413,8 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
                    interpret: bool, solver: str,
                    axis: str | None = None,
                    fallback: str = "cond",
-                   method: str = "cp"):
+                   method: str = "cp",
+                   collectives: tuple[str, ...] | None = None):
     """Build (and cache) the *pure* one-full-sweep function for a static
     configuration: ``sweep(state, mode_data_all, fit_data) -> (state, fit)``.
 
@@ -408,12 +436,22 @@ def build_sweep_fn(backend: str, nmodes: int, rank: int,
     ``method``: which decomposition method's update rule runs on the
     substrate — 'cp' is the inline path below; anything else resolves
     through the ``repro.methods`` registry.
+    ``collectives``: per-mode cross-device combine for the distributed
+    segment path ("psum" | "gather"); see ``_build_one_mttkrp``.
     """
     if fallback not in ("cond", "none"):
         raise ValueError(f"unknown fallback {fallback!r}")
+    if collectives is not None:
+        if axis is None or backend != "segment":
+            raise ValueError(
+                "per-mode collectives apply to the distributed segment "
+                "path only (axis set, backend='segment')")
+        if len(collectives) != nmodes or any(
+                c not in ("psum", "gather") for c in collectives):
+            raise ValueError(f"bad collectives {collectives!r}")
 
     one_mttkrp = _build_one_mttkrp(backend, nmodes, shapes, pallas_meta,
-                                   interpret, axis)
+                                   interpret, axis, collectives)
     solve = _build_solver(rank, solver, fallback)
     sparse_fit = _build_sparse_fit(nmodes, rank, axis)
 

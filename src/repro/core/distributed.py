@@ -187,31 +187,41 @@ def mttkrp_distributed(
 def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
                             shapes: tuple[int, ...], solver: str,
                             block: int, method: str = "cp",
-                            mode_width: int = 4, fit_width: int = 3):
+                            mode_widths: tuple[int, ...] = None,
+                            fit_width: int = 3,
+                            collectives: tuple[str, ...] | None = None):
     """Jitted shard_map of ``block`` consecutive distributed sweeps.
 
     The body squeezes each device's leading shard dim and scans the SAME
     sweep the fused engine uses (``build_sweep_fn`` with ``axis=AXIS``):
-    the whole check window is one dispatch, partial MTTKRPs psum inside
-    it, and state stays replicated (identical on every device because the
-    psummed inputs are identical).  Cached per (mesh, shapes, rank,
-    solver, window, method) — shard caps live in the array shapes, so
-    same-class tensors reuse the executable.
+    the whole check window is one dispatch, partial MTTKRPs combine
+    inside it, and state stays replicated (identical on every device
+    because the collective outputs are identical).  Cached per (mesh,
+    shapes, rank, solver, window, method, collectives) — shard caps live
+    in the array shapes, so same-class tensors reuse the executable.
 
-    ``mode_width`` / ``fit_width``: how many sharded arrays each mode /
-    the fit contract contributes — 4/3 for value-baked sweeps (cp, nncp),
-    6/4 for the valued+weighted masked contract (full coordinates and
-    entry weights ride along)."""
+    ``mode_widths`` / ``fit_width``: how many sharded arrays each mode /
+    the fit contract contributes — 4/3 per mode for value-baked psum
+    sweeps (cp, nncp), 6 for a gather-collective mode (owned-row slice
+    and destination map ride along), 6/4 for the valued+weighted masked
+    contract (full coordinates and entry weights).
+    ``collectives``: per-mode "psum"/"gather" choice forwarded to
+    ``build_sweep_fn`` (gather = the scheme-1 payload fix)."""
+    if mode_widths is None:
+        mode_widths = (4,) * nmodes
     sweep = build_sweep_fn("segment", nmodes, rank, shapes, None, True,
-                           solver, axis=AXIS, method=method)
+                           solver, axis=AXIS, method=method,
+                           collectives=collectives)
+    offs = [0]
+    for w in mode_widths:
+        offs.append(offs[-1] + w)
 
     def body(state, *flat):
         md = tuple(
-            tuple(jnp.squeeze(a, 0)
-                  for a in flat[mode_width * d: mode_width * (d + 1)])
+            tuple(jnp.squeeze(a, 0) for a in flat[offs[d]: offs[d + 1]])
             for d in range(nmodes)
         )
-        fd = tuple(jnp.squeeze(a, 0) for a in flat[mode_width * nmodes:])
+        fd = tuple(jnp.squeeze(a, 0) for a in flat[offs[-1]:])
 
         def step(st, _):
             return sweep(st, md, fd)
@@ -219,7 +229,7 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
         state, fits = lax.scan(step, state, xs=None, length=block)
         return state, fits
 
-    n_sharded = mode_width * nmodes + fit_width
+    n_sharded = offs[-1] + fit_width
     fn = shard_map(
         body, mesh=mesh_,
         in_specs=(P(),) + tuple(P(AXIS) for _ in range(n_sharded)),
@@ -229,26 +239,75 @@ def _build_dist_sweep_block(mesh_: Mesh, nmodes: int, rank: int,
     return _LEDGER.register(
         "dist_block",
         (nmodes, rank, shapes, "kappa", int(mesh_.devices.size),
-         "block", block, "method", method),
+         "block", block, "method", method, "collectives", collectives),
         jax.jit(fn))
 
 
-def _collect_dist_data(plan: DistributedPlan):
+def resolve_collectives(plan: DistributedPlan,
+                        collective: str) -> tuple[str, ...] | None:
+    """Per-mode collective tuple for ``collective`` ("psum" | "gather").
+
+    "gather" applies per mode only where the shards support it (scheme 1,
+    value-baked): scheme-2 modes keep the psum (their partials genuinely
+    overlap), so a mixed-scheme tensor still benefits on the modes that
+    can.  Returns None for the pure-psum configuration so the executable
+    cache key (and hence every pre-existing cache entry) is unchanged."""
+    if collective == "psum":
+        return None
+    if collective != "gather":
+        raise ValueError(f"unknown collective {collective!r}")
+    if plan.modes[0].idx_full is not None:
+        raise ValueError(
+            "collective='gather' supports value-baked methods only "
+            "(cp, nncp); the valued/weighted contract psums residual "
+            "MTTKRPs")
+    out = tuple("gather" if m.own_rows is not None else "psum"
+                for m in plan.modes)
+    return out
+
+
+def collective_payload_bytes(plan: DistributedPlan, rank: int,
+                             collectives: tuple[str, ...] | None) -> int:
+    """Bytes crossing the mesh per sweep to combine the N mode outputs:
+    psum moves every device's full (I_d, R) partial; gather moves each
+    device's (rows_cap, R) owned slice plus its int32 destination map."""
+    κ = plan.kappa
+    total = 0
+    for d, m in enumerate(plan.modes):
+        if collectives is not None and collectives[d] == "gather":
+            total += κ * m.rows_cap * (rank * 4 + 4)
+        else:
+            total += κ * m.num_rows * rank * 4
+    return int(total)
+
+
+def _collect_dist_data(plan: DistributedPlan,
+                       collectives: tuple[str, ...] | None = None):
     """Flat per-mode + fit device arrays in the order the sweep expects:
-    ``(idx, rows, vals, row_perm)`` per mode for value-baked sweeps,
+    ``(idx, rows, vals, row_perm)`` per mode for value-baked psum sweeps
+    (``+ (own_rows, gather_map)`` for gather-collective modes),
     ``(idx, rows, row_perm, idx_full, vals, ew)`` for the valued/weighted
-    masked contract (see ``methods.masked``)."""
+    masked contract (see ``methods.masked``).  Also returns the per-mode
+    widths for the flat-arg slicing."""
     flat = []
-    for m in plan.modes:
+    widths = []
+    for d, m in enumerate(plan.modes):
         if m.idx_full is not None:
             flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
                      jnp.asarray(m.row_perm), jnp.asarray(m.idx_full),
                      jnp.asarray(m.vals), jnp.asarray(m.ew)]
+            widths.append(6)
+        elif collectives is not None and collectives[d] == "gather":
+            flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
+                     jnp.asarray(m.vals), jnp.asarray(m.row_perm),
+                     jnp.asarray(m.own_rows), jnp.asarray(m.gather_map)]
+            widths.append(6)
         else:
             flat += [jnp.asarray(m.idx), jnp.asarray(m.rows),
                      jnp.asarray(m.vals), jnp.asarray(m.row_perm)]
+            widths.append(4)
     flat += [jnp.asarray(a) for a in plan.fit_shards]
-    return flat
+    return flat, tuple(widths)
 
 
 def cpd_als_distributed(
@@ -265,6 +324,7 @@ def cpd_als_distributed(
     method: str = "cp",
     weights: np.ndarray | None = None,
     init_state: tuple | None = None,
+    collective: str = "psum",
     verbose: bool = False,
 ) -> CPDResult:
     """Distributed CPD-ALS: the fused one-dispatch-per-window sweep under
@@ -278,7 +338,13 @@ def cpd_als_distributed(
     confidences through the shards for weighted-fit methods; and
     ``init_state`` warm-starts from existing factors — the same contracts
     as the sequential and batched front doors, so the three agree to fp32
-    tolerance (``tests/conformance``)."""
+    tolerance (``tests/conformance``).
+
+    ``collective`` — how per-device partial mode outputs combine:
+    "psum" (default; both schemes) or "gather" (scheme-1 modes all-gather
+    just their owned row slices, ~1/kappa of the psum payload; scheme-2
+    modes silently keep the psum).  Both produce identical factors up to
+    fp32 summation order."""
     t_start = obs_clock.now()
     spec = _method_spec(method)
     if plan is None:
@@ -305,17 +371,19 @@ def cpd_als_distributed(
     else:
         # (init_state the *parameter* shadows the module-level helper.)
         state = _device_init_state(tensor.shape, rank, seed)
-    flat = _collect_dist_data(plan)
-    mode_width = 6 if plan.modes[0].idx_full is not None else 4
+    collectives = resolve_collectives(plan, collective)
+    flat, mode_widths = _collect_dist_data(plan, collectives)
     fit_width = len(plan.fit_shards)
 
     n_blocks, rem = divmod(n_iters, check_every)
     fn_k = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
-                                   check_every, method, mode_width,
-                                   fit_width) if n_blocks else None
+                                   check_every, method, mode_widths,
+                                   fit_width, collectives
+                                   ) if n_blocks else None
     fn_rem = _build_dist_sweep_block(plan.mesh, N, rank, shapes, solver,
-                                     rem, method, mode_width,
-                                     fit_width) if rem else None
+                                     rem, method, mode_widths,
+                                     fit_width, collectives
+                                     ) if rem else None
 
     κ = plan.kappa
     shard_nnz = [int(m.nnz_per_dev) for m in plan.modes]

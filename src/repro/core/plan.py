@@ -131,6 +131,16 @@ class ModePlan:
     num_row_blocks: int
     slab_cap: int              # padded grid size G_cap (static)
     nnz_cap: int
+    # Segment-backend partitioning decision for this mode: how many
+    # partitions the mode layout is split into and under which
+    # load-balancing scheme ('index' / 'nnz'; None = the paper's adaptive
+    # threshold rule).  Defaults reproduce the caller's kappa untouched;
+    # an OBSERVED density profile routes through the cost chooser
+    # (``choose_segment_partition``) instead, so a skewed stream can move
+    # the bucket onto a different kappa/scheme than the uniform prior
+    # would pick.
+    seg_kappa: int = 1
+    seg_scheme: str | None = None
 
     @property
     def pallas_meta(self) -> tuple[int, int, int, int]:
@@ -190,6 +200,14 @@ class _UniformModeStats:
 
 
 DENSITY_BINS = 8
+
+# Segment-backend partition chooser (relative cost units of "one nnz of
+# segmented-reduction work"): per-partition fixed overhead and per-output-row
+# combine cost.  beta makes the optimal kappa finite (uniform loads would
+# otherwise always want more partitions); gamma prices scheme 2's
+# overlapping-output reduction against scheme 1's partition-local outputs.
+SEG_PART_OVERHEAD = 16.0     # beta: nnz-equivalents per extra partition
+SEG_COMBINE_COST = 1.0       # gamma: nnz-equivalents per combined output row
 
 
 class _ObservedModeStats(_UniformModeStats):
@@ -253,8 +271,66 @@ def density_profile(indices: np.ndarray, shape, mode: int,
     )
 
 
+def _lpt_makespan(loads: np.ndarray, kappa: int) -> float:
+    """Max partition load of the greedy LPT assignment of descending
+    ``loads`` onto ``kappa`` partitions — the same rule
+    ``load_balance.partition_mode`` executes, priced here without
+    building a layout."""
+    if kappa <= 1:
+        return float(loads.sum())
+    import heapq
+
+    heap = [0.0] * kappa
+    for v in loads:
+        heapq.heapreplace(heap, heap[0] + float(v))
+    return float(max(heap))
+
+
+def choose_segment_partition(stats, kappa_max: int) -> tuple[int, str]:
+    """Pick (kappa, scheme) for the segment backend from a mode's row-load
+    distribution (observed ``_ObservedModeStats`` or the uniform prior).
+
+    Cost model, in units of one nnz of segmented-reduction work:
+
+      scheme 'index' (1): LPT makespan over the row loads — a heavy row is
+        atomic, so skew caps how far extra partitions help — plus
+        ``SEG_PART_OVERHEAD`` per partition.
+      scheme 'nnz' (2): perfectly balanced ``nnz/kappa`` plus
+        ``SEG_COMBINE_COST`` per output row (the overlapping partial
+        outputs must be combined) plus the same per-partition overhead.
+
+    The argmin over kappa in {1, 2, 4, …, kappa_max} x both schemes is the
+    bucket's segment partitioning.  With uniform loads the chosen kappa
+    grows like sqrt(nnz / beta); a skewed profile plateaus the makespan at
+    the heavy rows' mass, so the chooser settles on fewer partitions —
+    which is exactly the observable the density feedback loop exists to
+    move."""
+    loads = np.sort(np.diff(stats.row_ptr))[::-1].astype(np.float64)
+    nnz = float(loads.sum())
+    best = (float("inf"), 1, "index")
+    k = 1
+    while k <= max(1, int(kappa_max)):
+        over = SEG_PART_OVERHEAD * k
+        c1 = _lpt_makespan(loads, k) + over
+        c2 = (nnz / k
+              + (SEG_COMBINE_COST * stats.num_rows if k > 1 else 0.0)
+              + over)
+        if c1 < best[0]:
+            best = (c1, k, "index")
+        if c2 < best[0]:
+            best = (c2, k, "nnz")
+        k *= 2
+    _, k, scheme = best
+    # A mode with fewer rows than partitions cannot index-partition
+    # meaningfully; mirror the paper's threshold as a floor.
+    if scheme == "index" and stats.num_rows < k:
+        scheme = "nnz"
+    return k, scheme
+
+
 def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
-               *, block_rows: int | None, tile: int | None) -> ModePlan:
+               *, block_rows: int | None, tile: int | None,
+               kappa: int = 1) -> ModePlan:
     if block_rows is None or tile is None:
         br, t = kops.auto_tiles(stats, rank=rank, factor_rows=factor_rows)
         block_rows = block_rows if block_rows is not None else br
@@ -263,6 +339,15 @@ def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
     rblk = kops.auto_rank_block(rank, block_rows, tile, factor_rows,
                                 num_inputs) or rank
     nb = max(1, -(-stats.num_rows // block_rows))
+    if isinstance(stats, _ObservedModeStats):
+        # Observed density: the cost chooser decides the segment
+        # partitioning (kappa is its ceiling).  Without a profile the
+        # plan reproduces the caller's kappa and the adaptive scheme
+        # rule untouched, so density-less paths stay bit-identical.
+        seg_kappa, seg_scheme = choose_segment_partition(
+            stats, max(int(kappa), DENSITY_BINS))
+    else:
+        seg_kappa, seg_scheme = max(1, int(kappa)), None
     return ModePlan(
         mode=mode,
         num_rows=stats.num_rows,
@@ -272,6 +357,8 @@ def _mode_plan(stats, mode: int, rank: int, factor_rows: int, nnz_cap: int,
         num_row_blocks=nb,
         slab_cap=slab_cap(stats.num_rows, nnz_cap, block_rows, tile),
         nnz_cap=int(nnz_cap),
+        seg_kappa=seg_kappa,
+        seg_scheme=seg_scheme,
     )
 
 
@@ -304,7 +391,8 @@ def plan_bucket(shape: tuple[int, ...], nnz_cap: int, rank: int,
             stats = _UniformModeStats(shape, d, nnz_cap)
         factor_rows = sum(shape[w] for w in stats.input_modes())
         modes.append(_mode_plan(stats, d, rank, factor_rows, nnz_cap,
-                                block_rows=block_rows, tile=tile))
+                                block_rows=block_rows, tile=tile,
+                                kappa=kappa))
     plan = PartitionPlan(shape=shape, nnz_cap=int(nnz_cap), rank=int(rank),
                          kappa=int(kappa), modes=tuple(modes))
     # Inside the lru-cached body, so the event fires once per NOVEL
@@ -339,6 +427,54 @@ def plan_tensor(tensor, rank: int, kappa: int = 1, *,
     ``quantize_nnz`` rule so a lone tensor and its bucket class agree."""
     cap = quantize_nnz(tensor.nnz) if nnz_cap is None else int(nnz_cap)
     return plan_bucket(tuple(int(s) for s in tensor.shape), cap, rank, kappa)
+
+
+# ---------------------------------------------------------------------------
+# Pod plans (the batch-axis shard_map path)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPlan:
+    """How a dispatched batch of one bucket class spreads over a batch-axis
+    device mesh: every device runs the SAME vmapped bucket executable on a
+    ``B / num_devices`` sub-batch, so the whole pod shares one compiled
+    pod block per (bucket, per-device B) class.
+
+    ``dispatch_batch`` is the single sizing rule: the requested batch is
+    rounded up to the scheduler's ``batch_quantum`` (the PR 6 executable-
+    key stabilizer) and then to a mesh multiple, so ``shard_map`` slices
+    the stacked arrays exactly — the padding slots are filled by
+    repeating the last request (exact under vmap: independent lanes whose
+    results are discarded)."""
+
+    bucket: PartitionPlan
+    num_devices: int
+    batch_quantum: int = 1
+
+    def dispatch_batch(self, batch: int) -> tuple[int, int]:
+        """(total dispatched B, per-device sub-batch) for ``batch``
+        queued requests."""
+        if batch < 1:
+            raise ValueError("batch must be >= 1")
+        q = max(1, int(self.batch_quantum))
+        tot = -(-int(batch) // q) * q
+        n = max(1, int(self.num_devices))
+        tot = -(-tot // n) * n
+        return tot, tot // n
+
+
+def plan_pod(shape: tuple[int, ...], nnz_cap: int, rank: int,
+             kappa: int = 1, *, num_devices: int, batch_quantum: int = 1,
+             density: tuple | None = None) -> PodPlan:
+    """Pod plan for a (shape, nnz_cap) bucket class: the bucket's static
+    ``plan_bucket`` plus the batch-axis sharding arithmetic."""
+    return PodPlan(
+        bucket=plan_bucket(tuple(int(s) for s in shape), int(nnz_cap),
+                           int(rank), int(kappa), density=density),
+        num_devices=int(num_devices),
+        batch_quantum=int(batch_quantum),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -377,6 +513,24 @@ class DeviceShards:
     # methods, which need neither.
     idx_full: np.ndarray | None = None   # (kappa, nnz_per_dev, N) int32
     ew: np.ndarray | None = None         # (kappa, nnz_per_dev) f32
+    # Gather-collective arrays (scheme 1 only): each device's owned
+    # RELABELED rows padded to a common cap, and the ORIGINAL row each
+    # (device, slot) lands on — padding slots point at the dummy row I_d,
+    # which the consumer slices off.  A scheme-1 partial output has
+    # support only on its device's owned rows, so all-gathering just the
+    # (rows_cap, R) owned slices and scattering through ``gather_map``
+    # reconstructs the full factor while moving kappa*rows_cap*R floats
+    # instead of the psum's kappa*I_d*R — saving ~(kappa-1)/kappa of the
+    # collective payload.  None for scheme 2 (partials overlap; the psum
+    # genuinely reduces).
+    own_rows: np.ndarray | None = None   # (kappa, rows_cap) int32 relabeled
+    gather_map: np.ndarray | None = None  # (kappa, rows_cap) int32 original
+
+    @property
+    def rows_cap(self) -> int:
+        """Per-device owned-row cap of the gather collective (0 when the
+        scheme does not support it)."""
+        return 0 if self.own_rows is None else int(self.own_rows.shape[1])
 
 
 def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM,
@@ -420,6 +574,23 @@ def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM,
             ew[p, :n] = w_lay[s:e]
     row_perm = np.broadcast_to(
         layout.row_perm, (kappa,) + layout.row_perm.shape).copy()
+    own_rows = gather_map = None
+    if layout.scheme == Scheme.INDEX_PARTITION:
+        # Scheme 1 partitions own disjoint contiguous relabeled ranges
+        # [row_lo, row_hi): record each device's owned rows (padded to a
+        # common cap by repeating an owned row — harmless, the padding
+        # destination is the dummy row) and the ORIGINAL row each slot
+        # scatters to (padding -> I_d, sliced off by the consumer).
+        counts = (layout.row_hi - layout.row_lo).astype(np.int64)
+        rcap = max(int(counts.max()) if kappa else 1, 1)
+        own_rows = np.zeros((kappa, rcap), np.int32)
+        gather_map = np.full((kappa, rcap), layout.num_rows, np.int32)
+        for p in range(kappa):
+            lo, hi = int(layout.row_lo[p]), int(layout.row_hi[p])
+            n = hi - lo
+            own_rows[p, :n] = np.arange(lo, hi, dtype=np.int32)
+            own_rows[p, n:] = lo if n else 0
+            gather_map[p, :n] = layout.row_perm[lo:hi]
     return DeviceShards(
         scheme=layout.scheme,
         mode=layout.mode,
@@ -432,6 +603,8 @@ def build_device_shards(layout, *, quantum: int = DEVICE_SHARD_QUANTUM,
         input_modes=tuple(in_modes),
         idx_full=idx_full,
         ew=ew,
+        own_rows=own_rows,
+        gather_map=gather_map,
     )
 
 

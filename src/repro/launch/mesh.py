@@ -29,6 +29,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes)
 
 
+BATCH_AXIS = "batch"
+
+
+def make_batch_mesh(num_devices: int | None = None):
+    """1-D mesh over the batch axis for pod serving.
+
+    The pod engine shards the *request* axis of a batched executable over
+    this mesh, so the axis name is fixed (the engine's shard_map specs and
+    the all-converged psum both reference it).  Defaults to every device
+    jax can see; pass ``num_devices`` to run a pod on a subset.
+    """
+    n = len(jax.devices()) if num_devices is None else int(num_devices)
+    if n < 1:
+        raise ValueError("pod mesh needs at least one device")
+    return make_mesh((n,), (BATCH_AXIS,))
+
+
 def make_host_mesh(shape=None, axes=None):
     """Small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

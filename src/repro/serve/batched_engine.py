@@ -52,6 +52,7 @@ stream's real skew instead of the uniform prior — see
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Sequence
 
@@ -60,6 +61,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import PartitionSpec as P
+try:
+    from jax import shard_map
+except ImportError:  # older jax keeps shard_map under experimental
+    from jax.experimental.shard_map import shard_map
 
 from ..core import als_device
 from ..core import plan as plan_mod
@@ -70,7 +76,7 @@ from ..kernels import ops as kops
 from ..obs import clock as obs_clock
 from ..obs import trace as obs_trace
 from ..obs.ledger import LEDGER as _LEDGER
-from .buckets import pad_tensor, pad_weights
+from .buckets import pad_tensor, pad_weights, repeat_pad
 
 _BATCH_BACKENDS = ("segment", "coo", "pallas")
 
@@ -85,15 +91,15 @@ def _all_finite(tree) -> jnp.ndarray:
     return ok
 
 
-@functools.lru_cache(maxsize=None)
-def _build_batched_block(backend: str, nmodes: int, rank: int,
-                         shapes: tuple[int, ...], nnz_cap: int, batch: int,
-                         interpret: bool, donate: bool, solver: str,
-                         block: int, pallas_meta: tuple | None = None,
-                         method: str = "cp"):
-    """Jitted ``lax.scan`` of ``block`` vmapped sweeps with per-tensor
-    convergence masking.  ``nnz_cap`` and ``batch`` are part of the key so
-    the cache honestly counts one executable per (bucket, B) class.
+def _make_window_runner(backend: str, nmodes: int, rank: int,
+                        shapes: tuple[int, ...], interpret: bool,
+                        solver: str, block: int,
+                        pallas_meta: tuple | None, method: str):
+    """The pure one-check-window function shared by the single-device
+    batched block and the pod block: ``run_block(carry, mode_data_all,
+    fit_data, tol_b, max_iters_b) -> (carry, fits (block, B))`` — a
+    ``lax.scan`` of ``block`` vmapped sweeps with per-tensor convergence
+    masking and the batch-level pinv-fallback cond.
 
     The pinv fallback is HOISTED to a batch-level ``lax.cond``: the
     window first scans a fallback-free sweep (under vmap a per-element
@@ -103,8 +109,7 @@ def _build_batched_block(backend: str, nmodes: int, rank: int,
     majority — never touch the SVD.  (For a method without a solve —
     HALS — the two sweeps coincide and the cond is a cheap no-op.)
 
-    carry = (state, active (B,) bool, last_fit (B,), done (B,) int32);
-    returns (carry, fits (block, B))."""
+    carry = (state, active (B,) bool, last_fit (B,), done (B,) int32)."""
     sweep_fast = als_device.build_sweep_fn(backend, nmodes, rank, shapes,
                                            pallas_meta, interpret, solver,
                                            fallback="none", method=method)
@@ -152,11 +157,93 @@ def _build_batched_block(backend: str, nmodes: int, rank: int,
         active = active & ~(jnp.abs(fit - fit_ref) < tol_b)
         return (state, active, fit, done), fits
 
+    return run_block
+
+
+@functools.lru_cache(maxsize=None)
+def _build_batched_block(backend: str, nmodes: int, rank: int,
+                         shapes: tuple[int, ...], nnz_cap: int, batch: int,
+                         interpret: bool, donate: bool, solver: str,
+                         block: int, pallas_meta: tuple | None = None,
+                         method: str = "cp"):
+    """Jitted one-check-window batched block (see ``_make_window_runner``).
+    ``nnz_cap`` and ``batch`` are part of the key so the cache honestly
+    counts one executable per (bucket, B) class."""
+    run_block = _make_window_runner(backend, nmodes, rank, shapes,
+                                    interpret, solver, block, pallas_meta,
+                                    method)
     return _LEDGER.register(
         "batched_block",
         (backend, nmodes, rank, shapes, "cap", nnz_cap, "B", batch,
          "block", block, "method", method),
         jax.jit(run_block, donate_argnums=(0,) if donate else ()))
+
+
+@functools.lru_cache(maxsize=None)
+def _build_pod_block(mesh_, backend: str, nmodes: int, rank: int,
+                     shapes: tuple[int, ...], nnz_cap: int,
+                     batch_per_dev: int, interpret: bool, donate: bool,
+                     solver: str, block: int, max_windows: int,
+                     pallas_meta: tuple | None = None, method: str = "cp"):
+    """The pod executable: ``shard_map`` over the mesh's batch axis of a
+    ``lax.while_loop`` over whole check windows — a multi-window
+    decomposition of B = devices * ``batch_per_dev`` requests is ONE
+    device dispatch.
+
+    Each device runs the SAME vmapped window the single-device batched
+    block scans (``_make_window_runner``) on its ``batch_per_dev`` lanes;
+    the loop condition reads an all-converged flag ``psum``-ed across the
+    mesh INSIDE the body (collectives are illegal in a while cond, so the
+    flag rides in the loop state) — no host judging between windows.  The
+    per-lane ``done < max_iters_b`` freeze caps every lane at exactly its
+    own budget, so running full windows only (``max_windows`` =
+    ceil(max_iters / block)) produces trajectories identical to the
+    single-device engine's remainder-window loop: frozen sweeps are
+    no-ops and each lane's fit history is sliced to its own ``done``.
+
+    Returns ``fn(carry, mode_data_all, fit_data, tol_b, max_iters_b) ->
+    (carry, fits (max_windows*block, B), windows_run)``."""
+    run_block = _make_window_runner(backend, nmodes, rank, shapes,
+                                    interpret, solver, block, pallas_meta,
+                                    method)
+    axis = mesh_.axis_names[0]
+    n_dev = int(mesh_.devices.size)
+    total_rows = max_windows * block
+
+    def pod_body(carry, mode_data_all, fit_data, tol_b, max_iters_b):
+        fits_buf = jnp.zeros((total_rows, carry[1].shape[0]), jnp.float32)
+
+        def wcond(ls):
+            _c, _fb, w, global_active = ls
+            return (w < max_windows) & global_active
+
+        def wbody(ls):
+            c, fb, w, _ = ls
+            c, fits_blk = run_block(c, mode_data_all, fit_data, tol_b,
+                                    max_iters_b)
+            fb = lax.dynamic_update_slice(fb, fits_blk,
+                                          (w * block, jnp.int32(0)))
+            ga = lax.psum(jnp.any(c[1]).astype(jnp.int32), axis) > 0
+            return (c, fb, w + jnp.int32(1), ga)
+
+        carry, fits_buf, w, _ = lax.while_loop(
+            wcond, wbody,
+            (carry, fits_buf, jnp.int32(0), jnp.bool_(True)))
+        return carry, fits_buf, w
+
+    Pb = P(axis)
+    fn = shard_map(
+        pod_body, mesh=mesh_,
+        in_specs=(Pb, Pb, Pb, Pb, Pb),
+        out_specs=(Pb, P(None, axis), P()),
+        check_rep=False,
+    )
+    return _LEDGER.register(
+        "pod_block",
+        (backend, nmodes, rank, shapes, "cap", nnz_cap,
+         "B/dev", batch_per_dev, "devices", n_dev, "block", block,
+         "windows", max_windows, "method", method),
+        jax.jit(fn, donate_argnums=(0,) if donate else ()))
 
 
 def batched_cache_stats():
@@ -168,12 +255,21 @@ def batched_cache_stats():
 
 
 class BatchedEngine:
-    """Stacks same-bucket tensors and drives the vmapped fused sweep."""
+    """Stacks same-bucket tensors and drives the vmapped fused sweep.
+
+    With ``mesh`` (a 1-D device mesh, e.g. ``launch.mesh.make_batch_mesh``)
+    the engine runs the POD path: the batch is padded to a mesh multiple
+    (repeat-last-request — exact, lanes are independent), the vmapped
+    window is wrapped in ``shard_map`` over the mesh's axis, and the
+    whole multi-window decomposition executes as ONE dispatch with
+    on-device convergence (``_build_pod_block``).  ``batch_quantum``
+    feeds the ``core.plan.PodPlan`` sizing rule so direct engine callers
+    and the scheduler agree on dispatched batch sizes."""
 
     def __init__(self, rank: int, *, kappa: int = 1,
                  backend: str = "segment", check_every: int = 4,
                  interpret: bool = True, donate: bool | None = None,
-                 solver: str = "auto"):
+                 solver: str = "auto", mesh=None, batch_quantum: int = 1):
         if backend not in _BATCH_BACKENDS:
             raise ValueError(
                 f"batched engine supports {_BATCH_BACKENDS}, got "
@@ -187,6 +283,27 @@ class BatchedEngine:
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
         self.solver = als_device.resolve_solver(solver)
+        if mesh is not None and len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"pod mesh must be 1-D (the batch axis), got axes "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.batch_quantum = max(1, int(batch_quantum))
+
+    @property
+    def num_devices(self) -> int:
+        """Mesh size of the pod path (1 when running single-device)."""
+        return 1 if self.mesh is None else int(self.mesh.devices.size)
+
+    def pod_plan(self, shape: tuple[int, ...], nnz_cap: int,
+                 density: tuple | None = None) -> plan_mod.PodPlan:
+        """The pod sizing plan for a bucket class (mesh path only)."""
+        if self.mesh is None:
+            raise ValueError("engine has no mesh; pod_plan is undefined")
+        return plan_mod.plan_pod(
+            shape, nnz_cap, self.rank, self.kappa,
+            num_devices=self.num_devices,
+            batch_quantum=self.batch_quantum, density=density)
 
     # -- data staging -------------------------------------------------------
 
@@ -326,6 +443,145 @@ class BatchedEngine:
 
     # -- driver -------------------------------------------------------------
 
+    def prepare_batch(
+        self,
+        tensors: Sequence[SparseTensor],
+        *,
+        n_iters: int | Sequence[int] = 25,
+        tol: float | Sequence[float] = 1e-5,
+        seeds: Sequence[int] | None = None,
+        nnz_cap: int | None = None,
+        method: str = "cp",
+        init_states: Sequence[tuple | None] | None = None,
+        density: tuple | None = None,
+        weights: Sequence | None = None,
+    ) -> "_PreparedBatch | None":
+        """HOST half of a batch decomposition: validation, pod padding,
+        layout stacking, and init-state assembly — everything up to (but
+        not including) the device dispatch.  Pure host work, so the
+        scheduler's double-buffered flush path can run it for flush N+1
+        while flush N computes on device.  Returns ``None`` for an empty
+        batch; feed the result to ``execute_prepared``."""
+        tensors = list(tensors)
+        if not tensors:
+            return None
+        spec = None
+        if method != "cp":
+            from ..methods import get_method
+
+            spec = get_method(method)
+            if spec.stateful:
+                raise ValueError(
+                    f"method {method!r} is stateful; drive it through its "
+                    f"session API (ALSRunner.open_stream)")
+        if weights is not None and any(w is not None for w in weights) and (
+                spec is None or not spec.weighted_fit):
+            raise ValueError(
+                f"per-entry weights require a weighted-fit method "
+                f"(e.g. 'masked'), got method={method!r}")
+        t_start = obs_clock.now()
+        requested = len(tensors)
+        shape = tuple(int(s) for s in tensors[0].shape)
+        for t in tensors:
+            if tuple(t.shape) != shape:
+                raise ValueError(
+                    f"batch mixes shapes {shape} and {tuple(t.shape)}; "
+                    f"bucket before batching")
+        N = len(shape)
+        cap = int(nnz_cap) if nnz_cap is not None else max(t.nnz
+                                                           for t in tensors)
+
+        if seeds is None:
+            seeds = [0] * requested
+        if len(seeds) != requested:
+            raise ValueError("seeds must match batch size")
+        if init_states is not None and len(init_states) != requested:
+            raise ValueError("init_states must match batch size")
+        if weights is not None and len(weights) != requested:
+            raise ValueError("weights must match batch size")
+        n_iters_b = np.broadcast_to(
+            np.asarray(n_iters, dtype=np.int32), (requested,)).copy()
+        tol_b = np.broadcast_to(
+            np.asarray(tol, dtype=np.float32), (requested,)).copy()
+
+        if self.mesh is not None:
+            # Pod sizing: round the batch up to a mesh multiple (through
+            # the batch_quantum first — one shared PodPlan rule) and
+            # repeat the last request into the padding lanes.  Exact:
+            # lanes are independent under vmap/shard_map and the padded
+            # lanes' results are discarded below.
+            B, _ = self.pod_plan(shape, cap, density).dispatch_batch(
+                requested)
+            if B > requested:
+                tensors = repeat_pad(tensors, B)
+                seeds = repeat_pad(list(seeds), B)
+                n_iters_b = np.asarray(repeat_pad(list(n_iters_b), B),
+                                       dtype=np.int32)
+                tol_b = np.asarray(repeat_pad(list(tol_b), B),
+                                   dtype=np.float32)
+                if init_states is not None:
+                    init_states = repeat_pad(list(init_states), B)
+                if weights is not None:
+                    weights = repeat_pad(list(weights), B)
+        else:
+            B = requested
+
+        padded = [pad_tensor(t, cap) for t in tensors]
+        mode_data_all, fit_data, pallas_meta = self._stack_batch(
+            tensors, padded, cap, method, density, weights)
+        # Host-side init, stacked once: one upload per state leaf instead
+        # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
+        init_fn = (spec.init_state_host if spec is not None
+                   and spec.init_state_host is not None
+                   else als_device.init_state_host)
+        inits = [
+            (init_states[i] if init_states is not None
+             and init_states[i] is not None
+             else init_fn(shape, self.rank, int(seeds[i])))
+            for i in range(B)
+        ]
+        state = (
+            tuple(jnp.asarray(np.stack([st[0][d] for st in inits]))
+                  for d in range(N)),
+            tuple(jnp.asarray(np.stack([st[1][d] for st in inits]))
+                  for d in range(N)),
+            jnp.asarray(np.stack([st[2] for st in inits])),
+        )
+        carry = (
+            state,
+            jnp.ones((B,), dtype=bool),
+            jnp.full((B,), -jnp.inf, dtype=jnp.float32),
+            jnp.zeros((B,), dtype=jnp.int32),
+        )
+        return _PreparedBatch(
+            requested=requested,
+            batch=B,
+            shape=shape,
+            cap=cap,
+            method=method,
+            carry=carry,
+            mode_data_all=mode_data_all,
+            fit_data=fit_data,
+            tol_dev=jnp.asarray(tol_b),
+            max_iters_dev=jnp.asarray(n_iters_b),
+            max_iters=int(n_iters_b.max()),
+            pallas_meta=pallas_meta,
+            lane_nnz=[int(t.nnz) for t in tensors],
+            t_start=t_start,
+        )
+
+    def execute_prepared(self, prep: "_PreparedBatch | None"
+                         ) -> list[CPDResult]:
+        """DEVICE half: dispatch a prepared batch and materialize results.
+        Single-device engines run the host-judged check-window loop; a
+        mesh engine runs the pod block — the entire multi-window run is
+        ONE dispatch with the convergence loop on device."""
+        if prep is None:
+            return []
+        if self.mesh is not None:
+            return self._execute_pod(prep)
+        return self._execute_loop(prep)
+
     def decompose_batch(
         self,
         tensors: Sequence[SparseTensor],
@@ -355,103 +611,46 @@ class BatchedEngine:
         Returned ``CPDResult``s carry per-tensor factors/fits/iters;
         ``total_seconds`` and ``host_syncs`` are *batch-level* (shared by
         all B results — the whole point is that the batch paid them once).
+
+        This is ``execute_prepared(prepare_batch(...))`` — the split
+        exists so the scheduler can overlap host assembly with device
+        compute (double buffering).
         """
-        tensors = list(tensors)
-        if not tensors:
-            return []
-        spec = None
-        if method != "cp":
-            from ..methods import get_method
+        return self.execute_prepared(self.prepare_batch(
+            tensors, n_iters=n_iters, tol=tol, seeds=seeds, nnz_cap=nnz_cap,
+            method=method, init_states=init_states, density=density,
+            weights=weights))
 
-            spec = get_method(method)
-            if spec.stateful:
-                raise ValueError(
-                    f"method {method!r} is stateful; drive it through its "
-                    f"session API (ALSRunner.open_stream)")
-        if weights is not None and any(w is not None for w in weights) and (
-                spec is None or not spec.weighted_fit):
-            raise ValueError(
-                f"per-entry weights require a weighted-fit method "
-                f"(e.g. 'masked'), got method={method!r}")
-        t_start = obs_clock.now()
-        B = len(tensors)
-        shape = tuple(int(s) for s in tensors[0].shape)
-        for t in tensors:
-            if tuple(t.shape) != shape:
-                raise ValueError(
-                    f"batch mixes shapes {shape} and {tuple(t.shape)}; "
-                    f"bucket before batching")
-        N = len(shape)
-        cap = int(nnz_cap) if nnz_cap is not None else max(t.nnz
-                                                           for t in tensors)
-        padded = [pad_tensor(t, cap) for t in tensors]
-
-        n_iters_b = np.broadcast_to(
-            np.asarray(n_iters, dtype=np.int32), (B,)).copy()
-        tol_b = np.broadcast_to(
-            np.asarray(tol, dtype=np.float32), (B,)).copy()
-        if seeds is None:
-            seeds = [0] * B
-        if len(seeds) != B:
-            raise ValueError("seeds must match batch size")
-        if init_states is not None and len(init_states) != B:
-            raise ValueError("init_states must match batch size")
-        if weights is not None and len(weights) != B:
-            raise ValueError("weights must match batch size")
-
-        mode_data_all, fit_data, pallas_meta = self._stack_batch(
-            tensors, padded, cap, method, density, weights)
-        # Host-side init, stacked once: one upload per state leaf instead
-        # of 2N+1 tiny transfers (and N gram dispatches) per tensor.
-        init_fn = (spec.init_state_host if spec is not None
-                   and spec.init_state_host is not None
-                   else als_device.init_state_host)
-        inits = [
-            (init_states[i] if init_states is not None
-             and init_states[i] is not None
-             else init_fn(shape, self.rank, int(seeds[i])))
-            for i in range(B)
-        ]
-        state = (
-            tuple(jnp.asarray(np.stack([st[0][d] for st in inits]))
-                  for d in range(N)),
-            tuple(jnp.asarray(np.stack([st[1][d] for st in inits]))
-                  for d in range(N)),
-            jnp.asarray(np.stack([st[2] for st in inits])),
-        )
-        carry = (
-            state,
-            jnp.ones((B,), dtype=bool),
-            jnp.full((B,), -jnp.inf, dtype=jnp.float32),
-            jnp.zeros((B,), dtype=jnp.int32),
-        )
-        tol_dev = jnp.asarray(tol_b)
-        max_iters_dev = jnp.asarray(n_iters_b)
-
-        max_iters = int(n_iters_b.max())
+    def _execute_loop(self, prep: "_PreparedBatch") -> list[CPDResult]:
+        """Single-device window loop: one dispatch + one active-mask host
+        sync per check window (the pre-pod contract)."""
+        carry = prep.carry
+        B, N = prep.batch, len(prep.shape)
         fits_dev: list = []
         host_syncs = 0
         it = 0
         tr = obs_trace.active()
-        while it < max_iters:
-            k = min(self.check_every, max_iters - it)
+        while it < prep.max_iters:
+            k = min(self.check_every, prep.max_iters - it)
             fn = _build_batched_block(
-                self.backend, N, self.rank, shape, cap, B,
-                self.interpret, self.donate, self.solver, k, pallas_meta,
-                method,
+                self.backend, N, self.rank, prep.shape, prep.cap, B,
+                self.interpret, self.donate, self.solver, k,
+                prep.pallas_meta, prep.method,
             )
             # Per-window dispatch + active-mask sync: the disabled branch
             # pays one global read and zero allocations.
             if tr is None:
-                carry, fits_blk = fn(carry, mode_data_all, fit_data,
-                                     tol_dev, max_iters_dev)
+                carry, fits_blk = fn(carry, prep.mode_data_all,
+                                     prep.fit_data, prep.tol_dev,
+                                     prep.max_iters_dev)
                 any_active = bool(np.any(jax.device_get(carry[1])))
             else:
                 with tr.span("batched.window", cat="serve",
                              backend=self.backend, B=B, sweeps=k,
-                             method=method):
-                    carry, fits_blk = fn(carry, mode_data_all, fit_data,
-                                         tol_dev, max_iters_dev)
+                             method=prep.method):
+                    carry, fits_blk = fn(carry, prep.mode_data_all,
+                                         prep.fit_data, prep.tol_dev,
+                                         prep.max_iters_dev)
                     any_active = bool(np.any(jax.device_get(carry[1])))
             fits_dev.append(fits_blk)
             it += k
@@ -460,16 +659,73 @@ class BatchedEngine:
                 break
 
         host_syncs += 1              # final materialization
-        state, _, _, done = carry
         fits_cat = (jnp.concatenate(fits_dev, axis=0) if fits_dev
                     else jnp.zeros((0, B), jnp.float32))   # n_iters <= 0
-        # One batched device_get for everything.
+        return self._materialize(prep, carry, fits_cat, host_syncs,
+                                 engine="batched")
+
+    def _execute_pod(self, prep: "_PreparedBatch") -> list[CPDResult]:
+        """Pod path: the whole multi-window run is ONE shard_map dispatch;
+        convergence is judged on device (``lax.while_loop`` + mesh psum),
+        so the only host sync is the final materialization."""
+        B, N = prep.batch, len(prep.shape)
+        n_dev = self.num_devices
+        per_dev = B // n_dev
+        max_windows = -(-prep.max_iters // self.check_every)
+        if max_windows == 0:                       # n_iters <= 0
+            return self._materialize(
+                prep, prep.carry, jnp.zeros((0, B), jnp.float32), 1,
+                engine="pod")
+        fn = _build_pod_block(
+            self.mesh, self.backend, N, self.rank, prep.shape, prep.cap,
+            per_dev, self.interpret, self.donate, self.solver,
+            self.check_every, max_windows, prep.pallas_meta, prep.method,
+        )
+        # Per-device request load for the dispatch span: lane i lands on
+        # device i // per_dev (shard_map splits the leading axis into
+        # contiguous blocks).
+        dev_nnz = [int(sum(prep.lane_nnz[p * per_dev:(p + 1) * per_dev]))
+                   for p in range(n_dev)]
+        tr = obs_trace.active()
+        if tr is None:
+            carry, fits_buf, windows = fn(
+                prep.carry, prep.mode_data_all, prep.fit_data,
+                prep.tol_dev, prep.max_iters_dev)
+            res = self._materialize(prep, carry, fits_buf, 1, engine="pod")
+        else:
+            with tr.span("pod.dispatch", cat="serve",
+                         backend=self.backend, B=B, devices=n_dev,
+                         B_per_device=per_dev, max_windows=max_windows,
+                         sweeps_per_window=self.check_every,
+                         nnz_cap=prep.cap, device_nnz=dev_nnz,
+                         method=prep.method):
+                carry, fits_buf, windows = fn(
+                    prep.carry, prep.mode_data_all, prep.fit_data,
+                    prep.tol_dev, prep.max_iters_dev)
+                res = self._materialize(prep, carry, fits_buf, 1,
+                                        engine="pod")
+            # Window count is only known after the fetch (the loop ran
+            # entirely on device) — record it as one aggregate event, not
+            # per-window spans: there were no per-window host syncs to
+            # hang spans off, which is the point.
+            obs_trace.event("pod.window", cat="serve",
+                            windows=int(windows), devices=n_dev,
+                            B_per_device=per_dev,
+                            sweeps_per_window=self.check_every)
+        return res
+
+    def _materialize(self, prep: "_PreparedBatch", carry, fits_cat,
+                     host_syncs: int, engine: str) -> list[CPDResult]:
+        """One batched device_get for everything; pod padding lanes (the
+        repeated trailing requests) are dropped here."""
+        N = len(prep.shape)
+        state, _, _, done = carry
         factors_h, weights_h, done_h, fits_h = jax.device_get(
             (state[0], state[2], done, fits_cat))
-        wall = obs_clock.now() - t_start
+        wall = obs_clock.now() - prep.t_start
 
         results = []
-        for i in range(B):
+        for i in range(prep.requested):
             ni = int(done_h[i])
             results.append(CPDResult(
                 factors=[np.asarray(factors_h[d][i]) for d in range(N)],
@@ -479,7 +735,29 @@ class BatchedEngine:
                 mttkrp_seconds=0.0,
                 total_seconds=wall,
                 host_syncs=host_syncs,
-                engine="batched",
-                method=method,
+                engine=engine,
+                method=prep.method,
             ))
         return results
+
+
+@dataclasses.dataclass
+class _PreparedBatch:
+    """Host-assembled batch, ready to dispatch (see ``prepare_batch``).
+    ``batch`` >= ``requested`` on the pod path (mesh-multiple padding);
+    only the first ``requested`` lanes materialize into results."""
+
+    requested: int
+    batch: int
+    shape: tuple[int, ...]
+    cap: int
+    method: str
+    carry: tuple
+    mode_data_all: tuple
+    fit_data: tuple
+    tol_dev: jnp.ndarray
+    max_iters_dev: jnp.ndarray
+    max_iters: int
+    pallas_meta: tuple | None
+    lane_nnz: list[int]
+    t_start: float

@@ -139,6 +139,20 @@ def pad_weights(weights: np.ndarray, nnz_cap: int) -> np.ndarray:
     return np.concatenate([w, np.zeros(nnz_cap - len(w), np.float32)])
 
 
+def repeat_pad(seq, total: int) -> list:
+    """Extend a per-request sequence to ``total`` entries by repeating the
+    last one — the batch-axis analogue of ``pad_tensor``: under vmap (and
+    the pod's shard_map) lanes are independent, so duplicated trailing
+    requests compute real-but-discarded results and the kept lanes are
+    bit-identical to an unpadded dispatch.  Used both by the scheduler's
+    ``batch_quantum`` stabilizer and by the pod engine's mesh-multiple
+    padding."""
+    seq = list(seq)
+    if not seq or total < len(seq):
+        raise ValueError(f"cannot repeat-pad {len(seq)} items to {total}")
+    return seq + [seq[-1]] * (total - len(seq))
+
+
 def pad_tensor(tensor: SparseTensor, nnz_cap: int) -> SparseTensor:
     """Append zero-valued entries at coordinate (0, …, 0) until
     ``nnz == nnz_cap``.  Appending (not interleaving) keeps every real

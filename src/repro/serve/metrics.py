@@ -88,6 +88,15 @@ class ServiceMetrics:
         self._cache_misses = 0
         self._occupancy_sum = 0.0
         self._triggers = collections.Counter()
+        # Pod / double-buffer dispatch gauges: one record per device
+        # dispatch (flush device-half), split into host-assembly seconds,
+        # device-execute seconds, and how much of the assembly overlapped
+        # some OTHER flush's execute interval (the double-buffer witness).
+        self._dispatches = 0
+        self._assembly_s = 0.0
+        self._execute_s = 0.0
+        self._overlap_s = 0.0
+        self._device_dispatches = collections.Counter()
         # bucket key -> list of per-mode EWMA row-density profiles
         self._density: dict[tuple, list[np.ndarray]] = {}
         # session id -> per-session streaming gauges (own lock: sessions
@@ -118,6 +127,21 @@ class ServiceMetrics:
             if event.max_batch:
                 self._occupancy_sum += event.batch_size / event.max_batch
             self._triggers[event.trigger] += 1
+
+    def record_dispatch(self, *, devices: list[int], assembly_s: float,
+                        execute_s: float, overlap_s: float):
+        """Fold one flush's dispatch timing into the pod gauges.
+        ``devices`` lists the device ids the executable spanned (all mesh
+        devices for a pod dispatch, ``[0]`` single-device); ``overlap_s``
+        is the part of this flush's host assembly that ran while another
+        flush's device half was executing."""
+        with self._lock:
+            self._dispatches += 1
+            self._assembly_s += float(assembly_s)
+            self._execute_s += float(execute_s)
+            self._overlap_s += float(overlap_s)
+            for d in devices:
+                self._device_dispatches[int(d)] += 1
 
     def record_density(self, bucket_key: tuple,
                        profiles: tuple[tuple[float, ...] | None, ...]):
@@ -223,6 +247,23 @@ class ServiceMetrics:
                 "flush_triggers": {
                     t: self._triggers.get(t, 0)
                     for t in ("max_batch", "max_wait", "aging", "forced")
+                },
+                "dispatch": {
+                    "count": self._dispatches,
+                    "assembly_s": self._assembly_s,
+                    "execute_s": self._execute_s,
+                    "overlap_s": self._overlap_s,
+                    # fraction of host assembly time hidden behind device
+                    # compute — 0 without double buffering, > 0 once the
+                    # executor pipelines flushes
+                    "overlap_fraction": (self._overlap_s / self._assembly_s
+                                         if self._assembly_s > 0 else 0.0),
+                    # fraction of service uptime the device(s) spent
+                    # executing dispatches
+                    "device_occupancy": (self._execute_s / span
+                                         if span > 0 else 0.0),
+                    "device_dispatches": dict(
+                        sorted(self._device_dispatches.items())),
                 },
             }
         out["streams"] = self._stream_snapshot()

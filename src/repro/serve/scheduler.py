@@ -30,11 +30,24 @@ Queue state is guarded by an RLock, but batches are *popped* under the
 lock and *executed* after releasing it, so a multi-second compile in one
 bucket never blocks concurrent submitters (a popped batch can no longer
 be double-flushed; each request belongs to exactly one batch).
+
+Double-buffered dispatch (``double_buffer=True``): the flush path splits
+at the engine's prepare/execute seam — host-side batch assembly
+(``engine.prepare_batch``: padding, layout stacking, init states) runs on
+the flushing caller's thread while the DEVICE half of the PREVIOUS flush
+is still executing on a one-worker dispatch executor.  Flush N+1's
+assembly therefore overlaps flush N's compute; the single worker keeps
+device executions serialized (one accelerator, in-order futures).
+``ServiceMetrics.record_dispatch`` accumulates the measured overlap and
+per-device dispatch counters; ``join()`` (or ``Future.result()``) waits
+out in-flight dispatches.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable
 
 import numpy as np
@@ -114,6 +127,7 @@ class BatchScheduler:
                  max_wait_s: float = 0.005,
                  batch_quantum: int = 1,
                  metrics: ServiceMetrics | None = None,
+                 double_buffer: bool = False,
                  clock: Callable[[], float] = obs_clock.now):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -130,6 +144,19 @@ class BatchScheduler:
         self.clock = clock
         self._queues: dict[Bucket, list[_Pending]] = {}
         self._lock = threading.RLock()
+        # Double-buffered dispatch: ONE worker so device executions stay
+        # serialized (and in submission order) while the caller thread
+        # assembles the next flush.  The exec-interval deque feeds the
+        # overlap gauge: an assembly interval that intersects another
+        # flush's device interval is time the host genuinely hid.
+        self.double_buffer = bool(double_buffer)
+        self._dispatch_pool = (ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-dispatch")
+            if double_buffer else None)
+        self._inflight: set = set()
+        self._exec_lock = threading.Lock()
+        self._exec_intervals: collections.deque = collections.deque(
+            maxlen=16)
 
     # -- request side -------------------------------------------------------
 
@@ -199,6 +226,18 @@ class BatchScheduler:
             if bucket is not None:
                 return len(self._queues.get(bucket, []))
             return sum(len(q) for q in self._queues.values())
+
+    def join(self) -> None:
+        """Wait for every in-flight double-buffered dispatch to complete
+        (no-op without ``double_buffer``).  Futures resolve as dispatches
+        finish; call this before reading end-of-stream metrics."""
+        while True:
+            with self._lock:
+                pending = list(self._inflight)
+            if not pending:
+                return
+            for f in pending:
+                f.result()
 
     # -- flush machinery ----------------------------------------------------
     # Pop under the lock, execute outside it: a popped batch belongs to
@@ -275,9 +314,14 @@ class BatchScheduler:
         with obs_trace.span("serve.flush", cat="serve",
                             bucket=str(bucket.key), batch=len(batch),
                             dispatched=len(exec_batch),
-                            trigger=trigger) as sp:
+                            trigger=trigger,
+                            double_buffer=self.double_buffer) as sp:
+            # HOST half: padding, layout stacking, init assembly.  Under
+            # double buffering this runs while the previous flush's
+            # device half is still executing on the dispatch worker —
+            # that intersection is the overlap gauge.
             try:
-                results = self.engine.decompose_batch(
+                prep = self.engine.prepare_batch(
                     [p.tensor for p in exec_batch],
                     n_iters=[p.n_iters for p in exec_batch],
                     tol=[p.tol for p in exec_batch],
@@ -298,8 +342,75 @@ class BatchScheduler:
                 for p in batch:
                     p.future._resolve(None, exc)
                 return
-            wall = obs_clock.now() - t0
-            stats1 = batched_cache_stats()
+            t_prep = obs_clock.now()
+            assembly_s = t_prep - t0
+            overlap_s = self._overlap_with_exec(t0, t_prep)
+            if self._dispatch_pool is None:
+                # Synchronous path (the default): device half inline,
+                # span covers the whole flush — pre-pod behavior.
+                self._execute_one(bucket, batch, exec_batch, trigger,
+                                  prep, stats0, t0, assembly_s,
+                                  overlap_s, sp)
+            else:
+                fut = self._dispatch_pool.submit(
+                    self._execute_one, bucket, batch, exec_batch, trigger,
+                    prep, stats0, t0, assembly_s, overlap_s, None)
+                with self._lock:
+                    self._inflight.add(fut)
+                fut.add_done_callback(self._inflight_discard)
+                sp.set(assembly_s=assembly_s, overlap_s=overlap_s,
+                       dispatched_async=True)
+
+    def _inflight_discard(self, fut) -> None:
+        with self._lock:
+            self._inflight.discard(fut)
+
+    def _overlap_with_exec(self, a0: float, a1: float) -> float:
+        """Seconds of the assembly interval [a0, a1] spent while some
+        other flush's device dispatch was executing — the double-buffer
+        overlap witness.  A still-running dispatch counts up to a1."""
+        with self._exec_lock:
+            intervals = [(e[0], e[1]) for e in self._exec_intervals]
+        total = 0.0
+        for e0, e1 in intervals:
+            hi = a1 if e1 is None else min(a1, e1)
+            total += max(0.0, hi - max(a0, e0))
+        return total
+
+    def _execute_one(self, bucket: Bucket, batch: list, exec_batch: list,
+                     trigger: str, prep, stats0: dict, t0: float,
+                     assembly_s: float, overlap_s: float, sp) -> None:
+        """DEVICE half of one flush (+ future resolution and metrics).
+        Runs inline on the flushing thread (sync path, ``sp`` = the open
+        flush span) or on the one-worker dispatch executor (double
+        buffering, ``sp`` = None and a ``serve.dispatch`` span is opened
+        here)."""
+        interval = [obs_clock.now(), None]
+        with self._exec_lock:
+            self._exec_intervals.append(interval)
+        try:
+            try:
+                if sp is None:
+                    with obs_trace.span("serve.dispatch", cat="serve",
+                                        bucket=str(bucket.key),
+                                        dispatched=len(exec_batch),
+                                        devices=self.engine.num_devices,
+                                        trigger=trigger):
+                        results = self.engine.execute_prepared(prep)
+                else:
+                    results = self.engine.execute_prepared(prep)
+            except BaseException as exc:
+                if sp is not None:
+                    sp.set(error=type(exc).__name__)
+                for p in batch:
+                    p.future._resolve(None, exc)
+                return
+        finally:
+            interval[1] = obs_clock.now()
+        execute_s = interval[1] - interval[0]
+        wall = obs_clock.now() - t0
+        stats1 = batched_cache_stats()
+        if sp is not None:
             sp.set(wall_s=wall,
                    cache_hits=stats1["hits"] - stats0["hits"],
                    cache_misses=stats1["misses"] - stats0["misses"])
@@ -319,6 +430,9 @@ class BatchScheduler:
                  for p in batch])))
             for d in range(len(shape))
         )
+        mesh = self.engine.mesh
+        device_ids = ([int(d.id) for d in mesh.devices.flat]
+                      if mesh is not None else [0])
         with self._lock:
             self.metrics.record_density(bucket.key, profiles)
             self.metrics.record_batch(
@@ -336,6 +450,9 @@ class BatchScheduler:
                 latencies_s=[now - p.t_submit for p in batch],
                 now=now,
             )
+            self.metrics.record_dispatch(
+                devices=device_ids, assembly_s=assembly_s,
+                execute_s=execute_s, overlap_s=overlap_s)
 
 
 class DecompositionService:
@@ -351,14 +468,16 @@ class DecompositionService:
                  backend: str = "segment", check_every: int = 4,
                  policy: BucketPolicy | None = None, max_batch: int = 8,
                  max_wait_s: float = 0.005, batch_quantum: int = 1,
+                 mesh=None, double_buffer: bool = False,
                  clock: Callable[[], float] = obs_clock.now):
         self.engine = BatchedEngine(rank, kappa=kappa, backend=backend,
-                                    check_every=check_every)
+                                    check_every=check_every, mesh=mesh,
+                                    batch_quantum=batch_quantum)
         self.metrics = ServiceMetrics()
         self.scheduler = BatchScheduler(
             self.engine, policy=policy, max_batch=max_batch,
             max_wait_s=max_wait_s, batch_quantum=batch_quantum,
-            metrics=self.metrics, clock=clock)
+            double_buffer=double_buffer, metrics=self.metrics, clock=clock)
 
     def submit(self, tensor: SparseTensor, **kw) -> DecompositionFuture:
         return self.scheduler.submit(tensor, **kw)
@@ -367,8 +486,11 @@ class DecompositionService:
         return self.scheduler.poll()
 
     def drain(self) -> int:
-        """Flush everything still queued."""
-        return self.scheduler.flush()
+        """Flush everything still queued, then wait for any in-flight
+        double-buffered dispatches to land (futures resolved)."""
+        n = self.scheduler.flush()
+        self.scheduler.join()
+        return n
 
     def snapshot(self) -> dict:
         return self.metrics.snapshot()

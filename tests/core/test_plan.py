@@ -186,3 +186,54 @@ def test_pack_rejects_overflowing_cap():
     lay = build_all_mode_layouts(t, 2)[0]
     with pytest.raises(ValueError, match="slab"):
         kops.pack_layout(lay, block_rows=8, tile=64, num_slabs_cap=1)
+
+
+# ---------------------------------------------------------------------------
+# Pod plans + density-driven segment partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_pod_plan_dispatch_arithmetic():
+    """Batch is rounded up to the quantum FIRST, then to a mesh multiple,
+    and the per-device sub-batch divides exactly."""
+    from repro.core.plan import plan_pod
+
+    pp = plan_pod((12, 13, 14), 256, 4, num_devices=8, batch_quantum=3)
+    assert pp.dispatch_batch(1) == (8, 1)     # 1 -> 3 (quantum) -> 8 (mesh)
+    assert pp.dispatch_batch(8) == (16, 2)    # 8 -> 9 -> 16
+    assert pp.dispatch_batch(13) == (16, 2)
+    assert pp.dispatch_batch(16) == (24, 3)   # 16 -> 18 -> 24
+    for b in (1, 5, 8, 13, 16, 40):
+        tot, per = pp.dispatch_batch(b)
+        # Mesh divisibility is the hard invariant (shard_map slices
+        # exactly); the quantum is only a lower-bound rounding step, so
+        # the final total need not be a quantum multiple.
+        assert tot >= b and tot == per * 8
+    with pytest.raises(ValueError):
+        pp.dispatch_batch(0)
+    # The underlying bucket plan is the SAME cached object plan_bucket
+    # hands everyone else — pod sharding adds arithmetic, not a new plan.
+    assert pp.bucket is plan_bucket((12, 13, 14), 256, 4, 1, density=None)
+
+
+def test_observed_density_moves_chosen_kappa():
+    """The density feedback loop's observable: a stream whose row mass
+    concentrates in the top density bin makes the segment cost chooser
+    settle on FEWER partitions for that mode (LPT makespan plateaus at
+    the heavy rows' mass), while uniform-prior modes keep the larger
+    kappa.  Config pinned to (96, 96, 96) cap=768 where the uniform
+    chooser picks kappa=8 and the skewed one kappa=4."""
+    from repro.core.plan import DENSITY_BINS
+
+    uni = tuple(1.0 / DENSITY_BINS for _ in range(DENSITY_BINS))
+    skew = (1.0,) + (0.0,) * (DENSITY_BINS - 1)
+    shape, cap = (96, 96, 96), 768
+    pu = plan_bucket(shape, cap, rank=4, kappa=8, density=(uni,) * 3)
+    ps = plan_bucket(shape, cap, rank=4, kappa=8, density=(skew, uni, uni))
+    assert [m.seg_kappa for m in pu.modes] == [8, 8, 8]
+    assert [(m.seg_kappa, m.seg_scheme) for m in ps.modes] == [
+        (4, "index"), (8, "index"), (8, "index")]
+    # Density-less plans never consult the chooser: seg fields reproduce
+    # the caller's kappa with no scheme pin (bit-identical legacy paths).
+    p0 = plan_bucket(shape, cap, rank=4, kappa=8)
+    assert all(m.seg_kappa == 8 and m.seg_scheme is None for m in p0.modes)

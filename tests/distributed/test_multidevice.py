@@ -185,3 +185,63 @@ def test_train_step_shards_on_2d_mesh():
         print("PASS", losses)
     """, devices=8)
     assert "PASS" in out
+
+
+def test_gather_collective_matches_psum():
+    """Scheme-1 (index-partitioned) modes can skip the full-array psum:
+    each device all-gathers only its owned row slice (plus the int32
+    destination map) and scatters locally.  The gather run must agree
+    with the psum run to fp32, and its recorded collective payload must
+    be strictly smaller on every index-partitioned mode."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import random_sparse
+        from repro.core.distributed import (
+            cpd_als_distributed, collective_payload_bytes,
+            make_distributed_plan, resolve_collectives)
+
+        t = random_sparse((64, 48, 32), 2000, seed=4,
+                          distribution="powerlaw")
+        for method in ("cp", "nncp"):
+            a = cpd_als_distributed(t, rank=4, n_iters=5, tol=-1.0, seed=2,
+                                    check_every=5, method=method)
+            b = cpd_als_distributed(t, rank=4, n_iters=5, tol=-1.0, seed=2,
+                                    check_every=5, method=method,
+                                    collective="gather")
+            np.testing.assert_allclose(b.fits, a.fits, rtol=1e-4, atol=1e-4)
+            for Fa, Fb in zip(a.factors, b.factors):
+                np.testing.assert_allclose(Fb, Fa, rtol=1e-3, atol=1e-3)
+
+        plan = make_distributed_plan(t)
+        cols = resolve_collectives(plan, "gather")
+        assert cols is not None and "gather" in cols
+        psum_b = collective_payload_bytes(plan, 4, None)
+        gath_b = collective_payload_bytes(plan, 4, cols)
+        assert gath_b < psum_b, (gath_b, psum_b)
+        print("PASS", cols, psum_b, gath_b)
+    """)
+    assert "PASS" in out
+
+
+def test_gather_collective_rejects_valued_plans():
+    """The gather scatter would drop the padding-row values the masked
+    (valued) layout needs, so resolving 'gather' for a weighted plan is a
+    hard error instead of silent wrongness."""
+    out = run_py("""
+        import numpy as np
+        from repro.core import random_sparse
+        from repro.core.distributed import cpd_als_distributed
+
+        t = random_sparse((48, 32, 16), 1200, seed=6,
+                          distribution="powerlaw")
+        w = np.random.default_rng(0).uniform(
+            0.25, 1.75, t.nnz).astype(np.float32)
+        try:
+            cpd_als_distributed(t, rank=4, n_iters=2, method="masked",
+                                weights=w, collective="gather")
+        except ValueError as e:
+            print("PASS", e)
+        else:
+            raise AssertionError("gather accepted a valued plan")
+    """)
+    assert "PASS" in out

@@ -127,13 +127,13 @@ def test_scheduler_threads_density_into_engine(monkeypatch):
     svc = DecompositionService(rank=3, kappa=2, max_batch=2,
                                max_wait_s=60.0)
     seen = []
-    orig = svc.engine.decompose_batch
+    orig = svc.engine.prepare_batch
 
     def spy(tensors, **kw):
         seen.append(kw.get("density"))
         return orig(tensors, **kw)
 
-    monkeypatch.setattr(svc.engine, "decompose_batch", spy)
+    monkeypatch.setattr(svc.engine, "prepare_batch", spy)
     t = random_sparse((16, 12, 9), 380, seed=0, distribution="powerlaw")
     svc.submit(t, n_iters=2, tol=-1.0).result()
     svc.submit(t, n_iters=2, tol=-1.0).result()

@@ -179,10 +179,17 @@ def test_neediest_bucket_flushes_first():
 
     class Spy:
         rank = 3
+        mesh = None
+        num_devices = 1
 
-        def decompose_batch(self, ts, **kw):
+        # The flush path is split into a host half and a device half;
+        # the spy mirrors both seams.
+        def prepare_batch(self, ts, **kw):
             order.append(tuple(ts[0].shape))
             return [_fake_result(t) for t in ts]
+
+        def execute_prepared(self, prep):
+            return prep
 
     def _fake_result(t):
         from repro.core.cpd import CPDResult
@@ -212,11 +219,19 @@ def test_engine_error_delivered_via_futures_not_caller():
     def boom(*a, **k):
         raise RuntimeError("engine down")
 
-    sched.engine.decompose_batch = boom
+    sched.engine.prepare_batch = boom      # host half of the flush
     assert sched.flush() == 1              # flush itself does not raise
     assert fut.done()
     with pytest.raises(RuntimeError, match="engine down"):
         fut.result()
+
+    # The device half fails the same way: futures, not the caller.
+    sched2, _ = make_scheduler(max_batch=8, max_wait_s=1e9)
+    fut2 = sched2.submit(tensors(SHAPE_A, 1)[0], n_iters=2, tol=-1.0)
+    sched2.engine.execute_prepared = boom
+    assert sched2.flush() == 1
+    with pytest.raises(RuntimeError, match="engine down"):
+        fut2.result()
 
 
 def test_per_request_options_survive_batching():

@@ -20,6 +20,10 @@ reported alongside.
 """
 from __future__ import annotations
 
+import functools
+import pathlib
+import socket
+import subprocess
 import time
 from typing import Callable
 
@@ -39,6 +43,38 @@ BENCH_SCALE = 0.04
 DATASETS = ("chicago", "enron", "nell-1", "nips", "uber", "vast")
 RANK = 32
 KAPPA = 82    # the paper's RTX 3090 SM count — kept for comparability
+
+_REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@functools.lru_cache(maxsize=1)
+def _static_provenance() -> dict:
+    def _git(*args: str) -> str:
+        try:
+            out = subprocess.run(["git", *args], cwd=_REPO_ROOT,
+                                 capture_output=True, text=True, timeout=10)
+        except (OSError, subprocess.SubprocessError):
+            return ""
+        return out.stdout.strip() if out.returncode == 0 else ""
+
+    return {
+        "git_sha": _git("rev-parse", "HEAD") or "unknown",
+        "git_dirty": bool(_git("status", "--porcelain")),
+        "host": socket.gethostname(),
+        "jax_version": jax.__version__,
+        "device": jax.devices()[0].platform,
+    }
+
+
+def provenance() -> dict:
+    """Run provenance stamped into every ``BENCH_*.json`` and history
+    record: git sha (+ dirty flag), hostname, jax version, device
+    platform — cached once per process — plus a fresh UTC timestamp.
+    The regression gate keys its cross-machine portability rules off the
+    (host, device) pair, so every emitter must carry it."""
+    out = dict(_static_provenance())
+    out["ts_utc"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    return out
 
 
 def load_datasets(scale: float = BENCH_SCALE, include_nell: bool = False):

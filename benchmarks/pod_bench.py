@@ -14,6 +14,10 @@ them back into the runner's structured rows.  The witnesses:
   * ``pod/load-balance`` — per-device nnz load of the dispatched lanes
     (shard_map splits the batch into contiguous per-device blocks) and
     the max/mean imbalance factor;
+  * ``pod/lane-placement`` — load-aware lane placement on a jittered-nnz
+    2-lanes-per-device batch: the placed per-device imbalance must be no
+    worse than the arrival-order contiguous split (both read from the
+    same ``pod.dispatch`` span);
   * ``pod/agreement`` — max fp32 deviation of the pod factors/fits from
     the single-device batched engine on the same requests;
   * ``pod/overlap`` — a double-buffered service stream through the pod
@@ -98,6 +102,31 @@ _CHILD = """
          "max_fit_err": fit_err, "max_factor_err": fac_err,
          "tolerance": 1e-3}})
     assert fit_err < 1e-3 and fac_err < 1e-2, (fit_err, fac_err)
+
+    # Load-aware lane placement: 2 lanes/device with shuffled jittered
+    # nnz — the placed (heaviest-first greedy) per-device load must be
+    # no worse than the arrival-order contiguous split, both recorded
+    # on the same pod.dispatch span.
+    rng = np.random.default_rng(0)
+    sizes = rng.permutation([max(NNZ - 23 * i, 40)
+                             for i in range(2 * {devices})]).tolist()
+    ts2 = [random_sparse(SHAPE, int(s), seed=200 + i,
+                         distribution="powerlaw")
+           for i, s in enumerate(sizes)]
+    with obs_trace.capture() as tr2:
+        pod.decompose_batch(ts2, n_iters=CHECK, tol=-1.0,
+                            seeds=list(range(len(ts2))), nnz_cap=cap)
+    d2 = [e for e in tr2.records()
+          if e["name"] == "pod.dispatch"][0]["args"]
+    assert d2["lane_placement"] == "balanced", d2
+    assert d2["imbalance"] <= d2["imbalance_contiguous"] + 1e-9, d2
+    row({{"name": "pod/lane-placement", "section": "balance",
+         "B": len(ts2), "devices": {devices},
+         "imbalance": d2["imbalance"],
+         "imbalance_contiguous": d2["imbalance_contiguous"],
+         "imbalance_delta": d2["imbalance_contiguous"] - d2["imbalance"],
+         "device_nnz": d2["device_nnz"],
+         "device_nnz_contiguous": d2["device_nnz_contiguous"]}})
 
     # Double-buffered stream through the pod engine: 3 flushes, each
     # flush's host assembly overlapping the previous flush's dispatch.

@@ -19,35 +19,50 @@ import sys
 import time
 
 from repro.obs import clock as obs_clock
+from repro.obs import history as obs_history
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[1] / "results"
+HISTORY_PATH = RESULTS_DIR / "BENCH_history.jsonl"
+
+
+def _clean(obj):
+    if isinstance(obj, dict):
+        return {str(k): _clean(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_clean(v) for v in obj]
+    if hasattr(obj, "item"):          # numpy scalars
+        return obj.item()
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    return repr(obj)
 
 
 def emit_json(name: str, wall_s: float, rows, config: dict) -> pathlib.Path:
-    """Write one section's machine-readable result file.  ``rows`` is the
-    section's structured output (list of dicts) when it provides one,
-    else None — wall time and config are always recorded."""
+    """Write one section's machine-readable result file AND append the
+    same (provenance-stamped) payload to the append-only history ledger.
+    ``rows`` is the section's structured output (list of dicts) when it
+    provides one, else None — wall time, config, and provenance are
+    always recorded."""
+    from . import common
+
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"BENCH_{name}.json"
+    prov = common.provenance()
+    rows = _clean(rows)
+    config = _clean(config)
 
-    def _clean(obj):
-        if isinstance(obj, dict):
-            return {str(k): _clean(v) for k, v in obj.items()}
-        if isinstance(obj, (list, tuple)):
-            return [_clean(v) for v in obj]
-        if hasattr(obj, "item"):          # numpy scalars
-            return obj.item()
-        if isinstance(obj, (str, int, float, bool)) or obj is None:
-            return obj
-        return repr(obj)
-
-    path.write_text(json.dumps(_clean({
+    path.write_text(json.dumps({
         "name": name,
         "config": config,
         "wall_s": wall_s,
         "rows": rows,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
-    }), indent=2) + "\n")
+        "provenance": prov,
+    }, indent=2) + "\n")
+    record = obs_history.make_record(
+        name, rows=rows if isinstance(rows, list) else None,
+        wall_s=wall_s, config=config, provenance=prov)
+    obs_history.append(HISTORY_PATH, record)
     return path
 
 
@@ -127,6 +142,14 @@ def _check_pod_rows(rows) -> None:
     agree = by_name.get("pod/agreement")
     if not agree or not agree.get("max_fit_err", 1.0) < 1e-3:
         sys.exit(f"pod vs single-device agreement failed: {agree}")
+    lane = by_name.get("pod/lane-placement")
+    if not lane:
+        sys.exit("pod section produced no 'pod/lane-placement' row")
+    if not (isinstance(lane.get("imbalance"), float)
+            and lane["imbalance"] <= lane.get("imbalance_contiguous",
+                                              0.0) + 1e-9):
+        sys.exit(f"load-aware lane placement did not improve on the "
+                 f"contiguous split: {lane}")
     led = by_name.get("pod/ledger")
     if not led:
         sys.exit("pod section produced no 'pod/ledger' row")

@@ -34,6 +34,7 @@ import time
 import numpy as np
 
 from repro.core import random_sparse
+from repro.obs import health as obs_health
 from repro.runtime import ALSRunner
 from repro.serve import BucketPolicy, DecompositionService
 
@@ -55,6 +56,19 @@ STREAM_SHAPES = {
     "uber-like": ((60, 24, 160, 200), 500),
     "nips-like": ((180, 200, 400), 500),
 }
+
+# Deliberately loose SLOs: the benchmark's job is to witness that the
+# live health evaluator runs against real serving gauges (the row
+# carries the verdict), not to fail CI on a loaded box.  Tight targets
+# belong in deployment configs.
+SLO = obs_health.SLOPolicy(
+    latency_p99_s=60.0,
+    queue_depth=100_000,
+    queue_age_s=600.0,
+    cache_hit_rate_min=0.01,
+    batch_occupancy_min=0.05,
+    min_events=8,
+)
 
 
 def make_stream(shape, base_nnz, m, *, jitter=0.0, seed=0):
@@ -81,7 +95,7 @@ def bench_stream(name, stream, *, rank, n_iters, check_every, backend,
     # -- batched service ---------------------------------------------------
     svc = DecompositionService(rank, backend=backend,
                                check_every=check_every, max_batch=max_batch,
-                               max_wait_s=1e9)
+                               max_wait_s=1e9, slo=SLO)
     # warm-up: compile each (bucket, B, window) class the stream will touch
     # with the SAME n_iters the timed run uses (window sizes are part of
     # the executable key)
@@ -120,6 +134,13 @@ def bench_stream(name, stream, *, rank, n_iters, check_every, backend,
         "latency_p99_s": snap["latency_p99_s"],
         "cache_hit_rate": snap["cache_hit_rate"],
         "batches": snap["batches"],
+        # Live snapshot gauges, verbatim — obs.report renders these as
+        # dispatch/queue/health tables and the history ledger flattens
+        # their scalar leaves into trend metrics.
+        "dispatch": snap["dispatch"],
+        "queue": snap["queue"],
+        "streams": snap["streams"],
+        "health": snap["health"],
     }
 
 
@@ -170,6 +191,14 @@ def main(argv=None):
               f"p99={r['latency_p99_s']*1e3:.0f}ms;"
               f"cache_hit={r['cache_hit_rate']*100:.0f}%;"
               f"plan={r['plan']}")
+        h = r["health"]
+        breaches = ";".join(f"{b['slo']}[{b['scope']}]"
+                            for b in h["breaches"]) or "-"
+        print(f"serve/{r['stream']}/health,0,"
+              f"status={h['status']};checked={h['checked']};"
+              f"breaches={breaches};"
+              f"overlap={r['dispatch']['overlap_fraction']:.2f};"
+              f"queue_peak={r['queue']['peak_depth']}")
     gmean = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
     worst_pad = max(r["padding_overhead"] for r in rows)
     print(f"serve/geomean-speedup,0,{gmean:.2f}x")

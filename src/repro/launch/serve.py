@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, reduce_config
 from repro.obs import clock as obs_clock
+from repro.obs import health as obs_health
 from repro.launch import steps as steps_mod
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
@@ -28,6 +29,9 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--quant-kv", action="store_true")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slo-decode-ms", type=float, default=None,
+                    help="per-token decode latency SLO; the run is judged "
+                         "by obs.health and exits non-zero on breach")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -68,11 +72,24 @@ def main():
         jax.block_until_ready(tok)
         t_decode = obs_clock.now() - t0
 
+    ms_per_tok = t_decode / max(G - 1, 1) * 1e3
     print(f"[serve] {args.arch}: batch={B} prompt={P} gen={G} "
           f"kv={'int8' if args.quant_kv else 'native'}")
     print(f"  prefill {t_prefill*1e3:.1f} ms | "
-          f"decode {t_decode/max(G-1,1)*1e3:.2f} ms/tok | "
+          f"decode {ms_per_tok:.2f} ms/tok | "
           f"throughput {B*(G-1)/max(t_decode,1e-9):.1f} tok/s")
+
+    if args.slo_decode_ms is not None:
+        # obs.health takes any hand-built gauge view; here the per-token
+        # decode latency is the one SLO a launcher run can witness.
+        policy = obs_health.SLOPolicy(latency_p99_s=args.slo_decode_ms / 1e3,
+                                      min_events=1)
+        report = obs_health.evaluate(
+            policy, {"completed": G - 1, "latency_p99_s": ms_per_tok / 1e3})
+        print(f"  [health] {report['status']}: decode {ms_per_tok:.2f} "
+              f"ms/tok vs SLO {args.slo_decode_ms:.2f} ms/tok")
+        if report["status"] != "ok":
+            raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -23,18 +23,43 @@ Three pieces, consumed by every layer of the stack:
     ``results/BENCH_obs.json`` (predicted-vs-observed ratio, per-mode
     load-imbalance factor, compile-vs-steady breakdown).
 
+The perf-sentinel layer rides on the same artifacts:
+
+  * ``obs.history`` — the append-only benchmark-history ledger
+    (``results/BENCH_history.jsonl``): every ``benchmarks/run.py``
+    section appends one schema-validated, provenance-stamped record
+    (git sha, UTC timestamp, host, jax/device versions, rows, plan
+    fingerprints).  ``python -m repro.obs.history validate`` is the CI
+    schema gate.
+  * ``obs.regress`` — the noise-aware regression gate: direction-aware
+    per-metric specs, min/max-of-k best aggregation over the ledger's
+    last k runs, tolerance bands widened by observed jitter but capped
+    so a 2x shift always fails.  ``python -m repro.obs.regress --check``
+    gates CI against the committed ``results/BENCH_baseline.json``;
+    ``--update-baseline`` refreshes it.
+  * ``obs.health`` — live serving SLO health: ``SLOPolicy`` targets
+    (per-bucket p99 latency, queue depth/age, cache-hit / overlap /
+    occupancy floors) judged against ``ServiceMetrics.snapshot()``
+    views, with edge-triggered ``health.breach`` / ``health.clear``
+    trace events so a JSONL trace alone reconstructs every incident.
+
 ``python -m repro.obs.report <file>`` renders any JSONL trace, Chrome
-trace, or BENCH json as a terminal dashboard.
+trace, or BENCH json as a terminal dashboard; ``--history`` adds trend
+tables over the history ledger.
 
 ``obs.clock`` is the one monotonic-clock front door (``perf_counter``)
 every layer times durations through; ``clock.wall`` is the epoch clock
 for timestamps only.
 
 Import discipline: this package's core (``trace``, ``ledger``,
-``clock``) depends on the stdlib only, so ``repro.core`` and
-``repro.kernels`` can import it without cycles; ``obs.calibrate`` and
-``obs.report`` import the rest of the stack and are therefore NOT
-imported here eagerly.
+``clock``, ``history``, ``regress``, ``health``) depends on the stdlib
+only, so ``repro.core`` and ``repro.kernels`` can import it without
+cycles; ``obs.calibrate`` and ``obs.report`` import the rest of the
+stack and are therefore NOT imported here eagerly.
+``history`` and ``regress`` double as ``python -m`` entrypoints, so they
+(and ``health``, for symmetry) are imported explicitly
+(``from repro.obs import health``), not eagerly here — an eager package
+import of a ``-m`` target trips the runpy double-import warning.
 """
 from . import clock  # noqa: F401
 from .ledger import LEDGER, RetraceLedger  # noqa: F401

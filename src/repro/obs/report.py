@@ -4,7 +4,9 @@ Reads any mix of
 
   * JSONL trace dumps (``Tracer.dump_jsonl`` — first line is meta),
   * Chrome-trace JSON exports (``Tracer.dump_chrome``),
-  * ``results/BENCH_obs.json`` calibration outputs,
+  * ``results/BENCH_obs.json`` calibration outputs (and any other
+    ``BENCH_*.json`` — rows carrying ``ServiceMetrics.snapshot()``
+    sub-dicts get the dispatch/streams/queue/health gauge tables),
 
 auto-detected per file, and renders:
 
@@ -13,7 +15,12 @@ auto-detected per file, and renders:
     self time),
   * the retrace/compile ledger — ``ledger.compile`` instant events
     grouped by executable-cache kind,
-  * the predicted-vs-observed and load-imbalance tables from BENCH rows.
+  * the predicted-vs-observed and load-imbalance tables from BENCH rows,
+  * the serving gauges: pod/double-buffer dispatch, per-session
+    streaming, queue depth/age, and SLO health,
+  * ``--history`` — trend tables over the last k runs per section in
+    ``results/BENCH_history.jsonl`` (gated metrics only, newest
+    rightmost).
 
 Pure stdlib; no jax import, so the dashboard works on any checkout.
 """
@@ -23,6 +30,8 @@ import json
 import sys
 from collections import defaultdict
 
+from . import history as obs_history
+from . import regress as obs_regress
 from . import trace as obs_trace
 
 _INDENT = "  "
@@ -174,12 +183,126 @@ def render_bench(doc: dict, out=None) -> None:
                 if k in ("name", "section"):
                     continue
                 print(f"    {k}: {v}", file=out)
+    for r in rows:
+        if isinstance(r, dict) and any(
+                isinstance(r.get(k), dict)
+                for k in ("dispatch", "streams", "queue", "health")):
+            render_snapshot(r, out=out, label=_row_label(r))
+
+
+def _row_label(row: dict) -> str:
+    for key in ("name", "dataset", "stream"):
+        v = row.get(key)
+        if isinstance(v, str) and v:
+            return v
+    return "snapshot"
+
+
+def render_snapshot(snap: dict, out=None, label: str = "snapshot") -> None:
+    """Gauge tables from a ``ServiceMetrics.snapshot()``-shaped dict —
+    pod/double-buffer dispatch, per-session streams, queue, and SLO
+    health (whichever sub-dicts are present)."""
+    out = out or sys.stdout
+    disp = snap.get("dispatch")
+    if isinstance(disp, dict) and disp:
+        print(f"  {label}: dispatch gauges:", file=out)
+        for k in ("count", "assembly_s", "execute_s", "overlap_s",
+                  "overlap_fraction", "device_occupancy"):
+            if k in disp:
+                print(f"    {k}: {_num(disp[k])}", file=out)
+        per_dev = disp.get("device_dispatches")
+        if per_dev:
+            devs = " ".join(f"d{d}:{n}" for d, n in sorted(per_dev.items()))
+            print(f"    device_dispatches: {devs}", file=out)
+    streams = snap.get("streams")
+    if isinstance(streams, dict) and streams:
+        print(f"  {label}: streaming sessions:", file=out)
+        print(f"    {'session':16s} {'incr':>5} {'evict':>5} "
+              f"{'p50_s':>9} {'p99_s':>9} {'merge_s':>9}", file=out)
+        for sid, s in sorted(streams.items()):
+            print(f"    {str(sid)[:16]:16s} {s.get('increments', 0):5d} "
+                  f"{s.get('evictions', 0):5d} "
+                  f"{_num(s.get('increment_p50_s')):>9} "
+                  f"{_num(s.get('increment_p99_s')):>9} "
+                  f"{_num(s.get('merge_s')):>9}", file=out)
+    queue = snap.get("queue")
+    if isinstance(queue, dict) and queue:
+        print(f"  {label}: queue: depth={queue.get('depth')} "
+              f"oldest_age_s={_num(queue.get('oldest_age_s'))} "
+              f"peak_depth={queue.get('peak_depth')} "
+              f"peak_age_s={_num(queue.get('peak_age_s'))}", file=out)
+    health = snap.get("health")
+    if isinstance(health, dict) and health:
+        status = health.get("status", "?")
+        print(f"  {label}: health: {status} "
+              f"({health.get('checked', 0)} SLO(s) judged)", file=out)
+        for b in health.get("breaches", []):
+            print(f"    BREACH {b.get('slo')} [{b.get('scope')}]: "
+                  f"observed {_num(b.get('observed'))} vs "
+                  f"{b.get('kind')} {_num(b.get('target'))}", file=out)
+
+
+# ---------------------------------------------------------------------------
+# History trends
+# ---------------------------------------------------------------------------
+
+
+def render_history(records: list[dict], out=None, k: int = 8,
+                   sections: list[str] | None = None) -> None:
+    """Trend tables over the ledger: per section, each gated metric's
+    last-k values (oldest → newest, one column per run, git sha header).
+    Metrics no spec gates are omitted — the trend table answers "is the
+    gate about to fire", not "dump everything"."""
+    out = out or sys.stdout
+    if not records:
+        print("  (empty history)", file=out)
+        return
+    secs = sections or sorted({r["section"] for r in records})
+    for sec in secs:
+        recs = obs_history.tail(records, sec, k)
+        if not recs:
+            continue
+        labels = [r["git_sha"][:7] + ("*" if r.get("git_dirty") else "")
+                  for r in recs]
+        series = [obs_history.row_metrics(r.get("rows", [])) for r in recs]
+        print(f"-- {sec} ({len(recs)} run(s), oldest -> newest) --",
+              file=out)
+        print(f"  {'metric':44s} " + " ".join(f"{l:>9}" for l in labels),
+              file=out)
+        names: list[str] = []
+        for s in series:
+            for name in s:
+                if name not in names:
+                    names.append(name)
+        shown = 0
+        for rname in names:
+            metrics: list[str] = []
+            for s in series:
+                for m in s.get(rname, {}):
+                    if m not in metrics:
+                        metrics.append(m)
+            for metric in metrics:
+                spec = obs_regress.classify(metric)
+                if spec is None:
+                    continue
+                vals = [s.get(rname, {}).get(metric) for s in series]
+                arrow = "^" if spec.direction == "up" else "v"
+                cells = " ".join(f"{_num(v):>9}" for v in vals)
+                print(f"  {arrow} {rname + ':' + metric:42s} {cells}",
+                      file=out)
+                shown += 1
+        if not shown:
+            print("  (no gated metrics in this section's rows)", file=out)
 
 
 def _num(x) -> str:
     if x is None:
         return "-"
-    return f"{x:.4g}"
+    if isinstance(x, bool):
+        return str(x)
+    if isinstance(x, (int, float)):
+        return f"{x:.4g}"
+    return str(x)
 
 
 # ---------------------------------------------------------------------------
@@ -207,14 +330,35 @@ def _load(path: str):
     return ("bench", doc)
 
 
+_DEFAULT_HISTORY = "results/BENCH_history.jsonl"
+
+
 def main(argv: list[str] | None = None, out=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     out = out or sys.stdout
-    if not argv or "-h" in argv or "--help" in argv:
-        print("usage: python -m repro.obs.report TRACE_OR_BENCH_FILE...",
-              file=out)
+    history_path = None
+    if "--history" in argv:
+        i = argv.index("--history")
+        argv.pop(i)
+        # optional path operand; default is the repo ledger
+        if i < len(argv) and not argv[i].startswith("-") \
+                and argv[i].endswith(".jsonl"):
+            history_path = argv.pop(i)
+        else:
+            history_path = _DEFAULT_HISTORY
+    if "-h" in argv or "--help" in argv or (not argv and not history_path):
+        print("usage: python -m repro.obs.report [--history [LEDGER]] "
+              "TRACE_OR_BENCH_FILE...", file=out)
         print(__doc__, file=out)
-        return 0 if argv else 2
+        return 0 if (argv or history_path) else 2
+    if history_path is not None:
+        print(f"== {history_path} ==", file=out)
+        try:
+            records = obs_history.load(history_path, strict=False)
+        except OSError as exc:
+            print(f"  (cannot read ledger: {exc})", file=out)
+            return 1
+        render_history(records, out=out)
     for path in argv:
         kind, *rest = _load(path)
         print(f"== {path} ==", file=out)

@@ -269,11 +269,16 @@ class BatchedEngine:
     def __init__(self, rank: int, *, kappa: int = 1,
                  backend: str = "segment", check_every: int = 4,
                  interpret: bool = True, donate: bool | None = None,
-                 solver: str = "auto", mesh=None, batch_quantum: int = 1):
+                 solver: str = "auto", mesh=None, batch_quantum: int = 1,
+                 lane_placement: str = "balanced"):
         if backend not in _BATCH_BACKENDS:
             raise ValueError(
                 f"batched engine supports {_BATCH_BACKENDS}, got "
                 f"{backend!r}")
+        if lane_placement not in ("balanced", "contiguous"):
+            raise ValueError(
+                f"lane_placement must be 'balanced' or 'contiguous', got "
+                f"{lane_placement!r}")
         self.rank = rank
         self.kappa = kappa
         self.backend = backend
@@ -289,6 +294,7 @@ class BatchedEngine:
                 f"{mesh.axis_names}")
         self.mesh = mesh
         self.batch_quantum = max(1, int(batch_quantum))
+        self.lane_placement = lane_placement
 
     @property
     def num_devices(self) -> int:
@@ -523,8 +529,32 @@ class BatchedEngine:
                     init_states = repeat_pad(list(init_states), B)
                 if weights is not None:
                     weights = repeat_pad(list(weights), B)
+            # Load-aware lane placement: shard_map splits the stacked
+            # batch axis into contiguous per-device blocks, so arrival
+            # order decides which device carries the heavy requests.
+            # Deal lanes heaviest-first to the least-loaded device;
+            # results are un-permuted in _materialize (lanes are
+            # independent, so per-request numerics are unchanged).
+            lane_of = None
+            if self.lane_placement == "balanced":
+                order = plan_mod.pod_lane_order(
+                    [int(t.nnz) for t in tensors], self.num_devices)
+                if order != list(range(B)):
+                    tensors = [tensors[i] for i in order]
+                    seeds = [seeds[i] for i in order]
+                    idx = np.asarray(order)
+                    n_iters_b = np.asarray(n_iters_b)[idx]
+                    tol_b = np.asarray(tol_b)[idx]
+                    if init_states is not None:
+                        init_states = [init_states[i] for i in order]
+                    if weights is not None:
+                        weights = [weights[i] for i in order]
+                    lane_of = [0] * B
+                    for lane, i in enumerate(order):
+                        lane_of[i] = lane
         else:
             B = requested
+            lane_of = None
 
         padded = [pad_tensor(t, cap) for t in tensors]
         mode_data_all, fit_data, pallas_meta = self._stack_batch(
@@ -567,6 +597,7 @@ class BatchedEngine:
             max_iters=int(n_iters_b.max()),
             pallas_meta=pallas_meta,
             lane_nnz=[int(t.nnz) for t in tensors],
+            lane_of=lane_of,
             t_start=t_start,
         )
 
@@ -683,9 +714,21 @@ class BatchedEngine:
         )
         # Per-device request load for the dispatch span: lane i lands on
         # device i // per_dev (shard_map splits the leading axis into
-        # contiguous blocks).
-        dev_nnz = [int(sum(prep.lane_nnz[p * per_dev:(p + 1) * per_dev]))
-                   for p in range(n_dev)]
+        # contiguous blocks).  lane_nnz is already in lane (placed)
+        # order; when placement ran, also record the arrival-order
+        # counterfactual so the balance win is visible in the trace.
+        dev_nnz = plan_mod.pod_device_nnz(prep.lane_nnz, n_dev)
+        placement = {"lane_placement": "contiguous"}
+        if prep.lane_of is not None:
+            arrival = [prep.lane_nnz[prep.lane_of[i]] for i in range(B)]
+            placement = {
+                "lane_placement": "balanced",
+                "device_nnz_contiguous":
+                    plan_mod.pod_device_nnz(arrival, n_dev),
+                "imbalance": plan_mod.pod_imbalance(prep.lane_nnz, n_dev),
+                "imbalance_contiguous":
+                    plan_mod.pod_imbalance(arrival, n_dev),
+            }
         tr = obs_trace.active()
         if tr is None:
             carry, fits_buf, windows = fn(
@@ -698,7 +741,7 @@ class BatchedEngine:
                          B_per_device=per_dev, max_windows=max_windows,
                          sweeps_per_window=self.check_every,
                          nnz_cap=prep.cap, device_nnz=dev_nnz,
-                         method=prep.method):
+                         method=prep.method, **placement):
                 carry, fits_buf, windows = fn(
                     prep.carry, prep.mode_data_all, prep.fit_data,
                     prep.tol_dev, prep.max_iters_dev)
@@ -726,11 +769,12 @@ class BatchedEngine:
 
         results = []
         for i in range(prep.requested):
-            ni = int(done_h[i])
+            li = prep.lane_of[i] if prep.lane_of is not None else i
+            ni = int(done_h[li])
             results.append(CPDResult(
-                factors=[np.asarray(factors_h[d][i]) for d in range(N)],
-                weights=np.asarray(weights_h[i], dtype=np.float64),
-                fits=[float(f) for f in fits_h[:ni, i]],
+                factors=[np.asarray(factors_h[d][li]) for d in range(N)],
+                weights=np.asarray(weights_h[li], dtype=np.float64),
+                fits=[float(f) for f in fits_h[:ni, li]],
                 iters=ni,
                 mttkrp_seconds=0.0,
                 total_seconds=wall,
@@ -760,4 +804,7 @@ class _PreparedBatch:
     max_iters: int
     pallas_meta: tuple | None
     lane_nnz: list[int]
+    # order[lane] inverse from load-aware placement: request i lives in
+    # lane lane_of[i].  None when lanes are in arrival order.
+    lane_of: list[int] | None
     t_start: float

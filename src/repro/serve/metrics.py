@@ -28,6 +28,14 @@ through a runner reports one ``record_stream_increment`` per update
 residency, eviction counts, increment latency p50/p99) — how the
 serving tier sees the stateful workload.
 
+SLO health is the read side's judgment call: construct with
+``slo=obs.health.SLOPolicy(...)`` and every ``snapshot()`` carries a
+``health`` section — per-bucket/global p99 latency ceilings, queue
+depth/age ceilings (fed by ``record_queue`` from the scheduler),
+cache-hit / occupancy / overlap floors, streaming-increment ceilings —
+with breach onsets emitted as edge-triggered ``health.breach`` trace
+events so a JSONL trace alone reconstructs the incident timeline.
+
 Thread safety: ServiceMetrics carries its OWN lock covering the batch /
 request / density state.  (It used to lean on the scheduler's lock,
 which left ``snapshot()`` — callable from any thread, and called by
@@ -45,6 +53,8 @@ import dataclasses
 import threading
 
 import numpy as np
+
+from ..obs import health as obs_health
 
 _DENSITY_EWMA = 0.3
 _DENSITY_QUANTUM = 1.0 / 16.0
@@ -67,7 +77,8 @@ class ServiceMetrics:
     """Accumulates per-request and per-batch events; ``snapshot()`` is the
     read side."""
 
-    def __init__(self, window: int = 4096):
+    def __init__(self, window: int = 4096,
+                 slo: "obs_health.SLOPolicy | None" = None):
         # Guards every non-stream field below.  Writers (scheduler
         # threads) and readers (snapshot from dashboard/bench threads)
         # may run concurrently; without this lock snapshot() could see
@@ -79,6 +90,10 @@ class ServiceMetrics:
         self.batch_count = 0
         self.latencies_s: collections.deque = collections.deque(
             maxlen=window)
+        # Per-bucket latency windows for the per-bucket p99 SLO targets;
+        # same sliding-window discipline as the global deque.
+        self._window = int(window)
+        self._bucket_lat: dict[tuple, collections.deque] = {}
         self.batches: collections.deque = collections.deque(maxlen=window)
         self.t_first_submit: float | None = None
         self.t_last_complete: float | None = None
@@ -99,10 +114,23 @@ class ServiceMetrics:
         self._device_dispatches = collections.Counter()
         # bucket key -> list of per-mode EWMA row-density profiles
         self._density: dict[tuple, list[np.ndarray]] = {}
+        # Queue gauges: the scheduler refreshes these on every
+        # submit/poll/flush — current pending depth, age of the oldest
+        # queued request, and their uptime peaks (the saturation SLOs).
+        self._queue_depth = 0
+        self._queue_age_s = 0.0
+        self._queue_peak_depth = 0
+        self._queue_peak_age_s = 0.0
         # session id -> per-session streaming gauges (own lock: sessions
         # record from outside the scheduler's critical section)
         self._streams: dict[str, dict] = {}
         self._streams_lock = threading.Lock()
+        # SLO health: evaluated over the snapshot view; the monitor
+        # edge-triggers health.breach/health.clear trace events.  No
+        # policy -> the health section reports "disabled".
+        self.slo = slo
+        self._health = (obs_health.HealthMonitor(slo)
+                        if slo is not None else None)
 
     # -- write side (own lock; callers need hold nothing) -------------------
 
@@ -119,6 +147,11 @@ class ServiceMetrics:
             self.batch_count += 1
             self.completed += event.batch_size
             self.latencies_s.extend(latencies_s)
+            blat = self._bucket_lat.get(event.bucket_key)
+            if blat is None:
+                blat = self._bucket_lat[event.bucket_key] = \
+                    collections.deque(maxlen=self._window)
+            blat.extend(latencies_s)
             self.t_last_complete = now
             self._real_nnz += event.real_nnz
             self._padded_nnz += event.padded_nnz
@@ -142,6 +175,19 @@ class ServiceMetrics:
             self._overlap_s += float(overlap_s)
             for d in devices:
                 self._device_dispatches[int(d)] += 1
+
+    def record_queue(self, depth: int, oldest_age_s: float):
+        """Refresh the queue-saturation gauges (current pending depth +
+        oldest queued request's age).  The scheduler calls this on every
+        submit/poll/flush, so the gauge tracks the live queue; peaks are
+        running maxima over the whole uptime."""
+        with self._lock:
+            self._queue_depth = int(depth)
+            self._queue_age_s = float(oldest_age_s)
+            self._queue_peak_depth = max(self._queue_peak_depth,
+                                         self._queue_depth)
+            self._queue_peak_age_s = max(self._queue_peak_age_s,
+                                         self._queue_age_s)
 
     def record_density(self, bucket_key: tuple,
                        profiles: tuple[tuple[float, ...] | None, ...]):
@@ -234,6 +280,19 @@ class ServiceMetrics:
                                   if lat.size else 0.0),
                 "latency_p99_s": (float(np.percentile(lat, 99))
                                   if lat.size else 0.0),
+                # str(bucket.key) -> windowed p99, for the per-bucket
+                # latency SLO targets (and dashboards)
+                "bucket_latency_p99_s": {
+                    str(k): float(np.percentile(
+                        np.asarray(d, dtype=np.float64), 99))
+                    for k, d in self._bucket_lat.items() if len(d)
+                },
+                "queue": {
+                    "depth": self._queue_depth,
+                    "oldest_age_s": self._queue_age_s,
+                    "peak_depth": self._queue_peak_depth,
+                    "peak_age_s": self._queue_peak_age_s,
+                },
                 # fraction of device nnz-slots spent on zero padding
                 "padding_overhead": (padded - real) / padded if padded
                 else 0.0,
@@ -267,6 +326,15 @@ class ServiceMetrics:
                 },
             }
         out["streams"] = self._stream_snapshot()
+        # Health last: the evaluator reads the snapshot view itself (a
+        # consistent copy — no locks held), so the report always judges
+        # exactly the gauges this snapshot exposes.  Breach onsets emit
+        # health.breach trace events (edge-triggered, see obs.health).
+        if self._health is None:
+            out["health"] = {"status": "disabled", "checked": 0,
+                             "breaches": []}
+        else:
+            out["health"] = self._health.observe(out)
         return out
 
     def _stream_snapshot(self) -> dict:

@@ -196,6 +196,7 @@ class BatchScheduler:
                          now, init_state, weights))
             self.metrics.record_submit(now)
             work = self._pop_ready()
+            self._record_queue_locked()
         self._run_batches(work)
         return fut
 
@@ -206,6 +207,7 @@ class BatchScheduler:
         arrivals."""
         with self._lock:
             work = self._pop_ready()
+            self._record_queue_locked()
         self._run_batches(work)
         return len(work)
 
@@ -218,6 +220,7 @@ class BatchScheduler:
             for b in buckets:
                 while self._queues.get(b):
                     work.append(self._pop(b, "forced"))
+            self._record_queue_locked()
         self._run_batches(work)
         return len(work)
 
@@ -243,6 +246,17 @@ class BatchScheduler:
     # Pop under the lock, execute outside it: a popped batch belongs to
     # exactly one caller, so the engine (potentially a multi-second
     # compile) never runs inside the critical section.
+
+    def _record_queue_locked(self) -> None:
+        """Refresh the metrics queue-saturation gauges (pending depth +
+        oldest queued age).  Caller holds ``self._lock``; the metrics
+        object takes its own lock, which is safe — metrics never calls
+        back into the scheduler."""
+        depth = sum(len(q) for q in self._queues.values())
+        oldest = min((q[0].t_submit for q in self._queues.values() if q),
+                     default=None)
+        age = 0.0 if oldest is None else max(self.clock() - oldest, 0.0)
+        self.metrics.record_queue(depth, age)
 
     def _pop(self, bucket: Bucket, trigger: str):
         q = self._queues.get(bucket, [])
@@ -468,12 +482,14 @@ class DecompositionService:
                  backend: str = "segment", check_every: int = 4,
                  policy: BucketPolicy | None = None, max_batch: int = 8,
                  max_wait_s: float = 0.005, batch_quantum: int = 1,
-                 mesh=None, double_buffer: bool = False,
+                 mesh=None, double_buffer: bool = False, slo=None,
                  clock: Callable[[], float] = obs_clock.now):
         self.engine = BatchedEngine(rank, kappa=kappa, backend=backend,
                                     check_every=check_every, mesh=mesh,
                                     batch_quantum=batch_quantum)
-        self.metrics = ServiceMetrics()
+        # slo: an obs.health.SLOPolicy; snapshot() then carries a live
+        # "health" section and breach onsets emit health.breach events.
+        self.metrics = ServiceMetrics(slo=slo)
         self.scheduler = BatchScheduler(
             self.engine, policy=policy, max_batch=max_batch,
             max_wait_s=max_wait_s, batch_quantum=batch_quantum,

@@ -1,0 +1,212 @@
+"""SLO health: the pure evaluator, edge-triggered breach events, and the
+live wiring through ServiceMetrics / DecompositionService — including
+reconstructing a breach from a JSONL trace dump alone."""
+import json
+
+import pytest
+
+from repro.obs import health
+from repro.obs import trace as obs_trace
+
+
+def _policy(**kw):
+    kw.setdefault("min_events", 2)
+    return health.SLOPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# evaluate()
+# ---------------------------------------------------------------------------
+
+
+def test_empty_policy_checks_nothing():
+    rep = health.evaluate(health.SLOPolicy(), {"completed": 100,
+                                               "latency_p99_s": 99.0})
+    assert rep == {"status": "ok", "checked": 0, "breaches": []}
+
+
+def test_latency_ceiling():
+    pol = _policy(latency_p99_s=0.5)
+    rep = health.evaluate(pol, {"completed": 10, "latency_p99_s": 0.4})
+    assert rep["status"] == "ok" and rep["checked"] == 1
+    rep = health.evaluate(pol, {"completed": 10, "latency_p99_s": 0.7})
+    assert rep["status"] == "breach"
+    (b,) = rep["breaches"]
+    assert b == {"slo": "latency_p99_s", "scope": "service",
+                 "kind": "ceiling", "target": 0.5, "observed": 0.7}
+    # no completions -> latency gauge is meaningless, not judged
+    rep = health.evaluate(pol, {"completed": 0, "latency_p99_s": 9.0})
+    assert rep["checked"] == 0
+
+
+def test_per_bucket_latency_with_global_fallback():
+    pol = _policy(latency_p99_s=1.0,
+                  bucket_latency_p99_s={"('a',)": 0.1})
+    view = {"completed": 10,
+            "bucket_latency_p99_s": {"('a',)": 0.2, "('b',)": 0.5}}
+    rep = health.evaluate(pol, view)
+    assert rep["checked"] == 2
+    (b,) = rep["breaches"]           # 'a' breaches its 0.1; 'b' under 1.0
+    assert b["slo"] == "bucket_latency_p99_s" and b["scope"] == "('a',)"
+
+
+def test_queue_ceilings_judged_even_cold():
+    pol = _policy(queue_depth=4, queue_age_s=1.0)
+    view = {"completed": 0, "queue": {"depth": 9, "oldest_age_s": 2.5}}
+    rep = health.evaluate(pol, view)
+    assert rep["status"] == "breach" and rep["checked"] == 2
+    assert {b["slo"] for b in rep["breaches"]} == {"queue_depth",
+                                                   "queue_age_s"}
+
+
+def test_floors_arm_only_warm():
+    pol = _policy(cache_hit_rate_min=0.5, batch_occupancy_min=0.5)
+    cold = {"completed": 1, "cache_hit_rate": 0.0, "batch_occupancy": 0.0}
+    assert health.evaluate(pol, cold)["checked"] == 0
+    warm = {"completed": 2, "cache_hit_rate": 0.0, "batch_occupancy": 0.9}
+    rep = health.evaluate(pol, warm)
+    assert rep["checked"] == 2
+    (b,) = rep["breaches"]
+    assert b["slo"] == "cache_hit_rate" and b["kind"] == "floor"
+
+
+def test_overlap_floor_needs_dispatch_volume():
+    pol = _policy(overlap_fraction_min=0.2)
+    view = {"completed": 10,
+            "dispatch": {"count": 1, "overlap_fraction": 0.0}}
+    assert health.evaluate(pol, view)["checked"] == 0   # too few dispatches
+    view["dispatch"]["count"] = 2
+    rep = health.evaluate(pol, view)
+    assert rep["checked"] == 1 and rep["status"] == "breach"
+
+
+def test_stream_increment_ceiling_per_session():
+    pol = _policy(stream_increment_p99_s=0.1)
+    view = {"completed": 0, "streams": {
+        "fast": {"increments": 5, "increment_p99_s": 0.01},
+        "slow": {"increments": 5, "increment_p99_s": 0.5},
+        "cold": {"increments": 0, "increment_p99_s": 0.0},
+    }}
+    rep = health.evaluate(pol, view)
+    assert rep["checked"] == 2
+    (b,) = rep["breaches"]
+    assert b["scope"] == "slow"
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor: edge-triggered events
+# ---------------------------------------------------------------------------
+
+
+def test_monitor_emits_on_onset_and_clear_only():
+    mon = health.HealthMonitor(_policy(queue_depth=4))
+    red = {"queue": {"depth": 9}}
+    green = {"queue": {"depth": 0}}
+    with obs_trace.capture() as tr:
+        assert mon.observe(red)["status"] == "breach"
+        mon.observe(red)             # still red: no second event
+        mon.observe(red)
+        mon.observe(green)           # recovery
+        mon.observe(green)
+    names = [r["name"] for r in tr.records()]
+    assert names.count("health.breach") == 1
+    assert names.count("health.clear") == 1
+    breach = [r for r in tr.records() if r["name"] == "health.breach"][0]
+    assert breach["args"]["slo"] == "queue_depth"
+    assert breach["args"]["observed"] == 9.0
+
+
+def test_monitor_reset_rearms():
+    mon = health.HealthMonitor(_policy(queue_depth=4))
+    red = {"queue": {"depth": 9}}
+    with obs_trace.capture() as tr:
+        mon.observe(red)
+        mon.reset()
+        mon.observe(red)             # re-onset after reset
+    names = [r["name"] for r in tr.records()]
+    assert names.count("health.breach") == 2
+
+
+def test_monitor_without_tracer_is_silent():
+    mon = health.HealthMonitor(_policy(queue_depth=4))
+    assert obs_trace.active() is None
+    assert mon.observe({"queue": {"depth": 9}})["status"] == "breach"
+
+
+# ---------------------------------------------------------------------------
+# Live wiring: ServiceMetrics and the service front door
+# ---------------------------------------------------------------------------
+
+
+def _saturate(metrics):
+    from repro.serve.metrics import BatchEvent
+    metrics.record_submit(0.0)
+    metrics.record_batch(
+        BatchEvent(bucket_key=("a",), batch_size=4, max_batch=8,
+                   real_nnz=100, padded_nnz=128, wall_s=1.0,
+                   trigger="max_batch", cache_hits=0, cache_misses=4),
+        latencies_s=[2.0, 2.0, 2.0, 2.0], now=1.0)
+    metrics.record_queue(depth=50, oldest_age_s=3.0)
+
+
+def test_service_metrics_snapshot_health():
+    from repro.serve.metrics import ServiceMetrics
+    slo = _policy(latency_p99_s=0.5, queue_depth=10)
+    m = ServiceMetrics(slo=slo)
+    _saturate(m)
+    snap = m.snapshot()
+    assert snap["health"]["status"] == "breach"
+    slos = {b["slo"] for b in snap["health"]["breaches"]}
+    assert {"latency_p99_s", "queue_depth"} <= slos
+    # without a policy the health block reports disabled, never judges
+    snap2 = ServiceMetrics().snapshot()
+    assert snap2["health"] == {"status": "disabled", "checked": 0,
+                               "breaches": []}
+
+
+def test_breach_reconstructible_from_jsonl_alone(tmp_path):
+    from repro.obs import load_jsonl
+    from repro.serve.metrics import ServiceMetrics
+    m = ServiceMetrics(slo=_policy(queue_depth=10))
+    path = tmp_path / "svc.trace.jsonl"
+    with obs_trace.capture() as tr:
+        _saturate(m)
+        assert m.snapshot()["health"]["status"] == "breach"
+        m.record_queue(depth=0, oldest_age_s=0.0)
+        assert m.snapshot()["health"]["status"] == "ok"
+        tr.dump_jsonl(str(path))
+    # The dump alone reconstructs the incident: one onset, one recovery.
+    records = load_jsonl(str(path))
+    breaches = [r for r in records if r.get("name") == "health.breach"]
+    clears = [r for r in records if r.get("name") == "health.clear"]
+    assert len(breaches) == 1 and len(clears) == 1
+    b = breaches[0]["args"]
+    assert b["slo"] == "queue_depth" and b["observed"] == 50.0
+    assert clears[0]["args"]["slo"] == "queue_depth"
+
+
+def test_service_end_to_end_latency_breach():
+    from repro.core import random_sparse
+    from repro.serve import DecompositionService
+    # An SLO no real flush can meet: every completed request is a
+    # latency spike, so the live snapshot must go red.
+    slo = health.SLOPolicy(latency_p99_s=1e-9, min_events=1)
+    svc = DecompositionService(rank=2, max_batch=4, max_wait_s=1e9,
+                               slo=slo)
+    with obs_trace.capture() as tr:
+        futs = [svc.submit(random_sparse((8, 7, 6), 40, seed=i),
+                           n_iters=2, tol=-1.0, seed=i) for i in range(4)]
+        svc.drain()
+        for f in futs:
+            f.result()
+        snap = svc.snapshot()
+    assert snap["health"]["status"] == "breach"
+    assert any(b["slo"] == "latency_p99_s"
+               for b in snap["health"]["breaches"])
+    assert any(r["name"] == "health.breach" for r in tr.records())
+
+
+def test_breach_dict_roundtrips_json():
+    b = health.Breach("latency_p99_s", "service", "ceiling", 0.5, 0.7)
+    assert json.loads(json.dumps(b.as_dict())) == b.as_dict()
+    assert b.key() == ("latency_p99_s", "service")

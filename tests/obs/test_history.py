@@ -1,0 +1,131 @@
+"""Benchmark-history ledger: schema validation, append/load roundtrip,
+row-metric flattening, and the CLI schema gate."""
+import json
+
+import pytest
+
+from repro.obs import history
+
+PROV = {"ts_utc": "2026-08-08T00:00:00Z", "git_sha": "a" * 40,
+        "git_dirty": False, "host": "ci", "jax_version": "0.4",
+        "device": "cpu"}
+
+
+def _record(section="serve", rows=None, smoke=True, wall_s=1.5):
+    return history.make_record(
+        section, rows=rows if rows is not None else [{"name": "r0",
+                                                      "speedup": 2.0}],
+        wall_s=wall_s, config={"argv": [], "smoke": smoke}, provenance=PROV)
+
+
+def test_make_record_validates_and_stamps():
+    rec = _record()
+    assert rec["schema"] == history.SCHEMA_VERSION
+    assert rec["kind"] == "bench"
+    assert rec["git_sha"] == "a" * 40
+    assert rec["smoke"] is True
+    assert rec["ts_utc"] == PROV["ts_utc"]
+    history.validate_record(rec)          # idempotent
+
+
+def test_validate_names_first_violation():
+    rec = _record()
+    del rec["git_sha"]
+    with pytest.raises(ValueError, match="git_sha"):
+        history.validate_record(rec)
+    rec = _record()
+    rec["wall_s"] = "fast"
+    with pytest.raises(ValueError, match="wall_s"):
+        history.validate_record(rec)
+    rec = _record()
+    rec["schema"] = 99
+    with pytest.raises(ValueError, match="schema 99"):
+        history.validate_record(rec)
+    rec = _record()
+    rec["rows"] = [{"ok": 1}, "not-a-dict"]
+    with pytest.raises(ValueError, match=r"rows\[1\]"):
+        history.validate_record(rec)
+    with pytest.raises(ValueError, match="object"):
+        history.validate_record([1, 2])
+
+
+def test_append_load_roundtrip(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    recs = [_record(section=s, wall_s=float(i))
+            for i, s in enumerate(("serve", "obs", "serve"))]
+    for r in recs:
+        history.append(path, r)
+    back = history.load(path)
+    assert back == recs
+    # one sorted-keys JSON object per line, append-only
+    lines = path.read_text().splitlines()
+    assert len(lines) == 3
+    for line in lines:
+        obj = json.loads(line)
+        assert list(obj) == sorted(obj)
+
+
+def test_append_rejects_invalid(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    bad = _record()
+    del bad["host"]
+    with pytest.raises(ValueError, match="host"):
+        history.append(path, bad)
+    assert not path.exists()
+
+
+def test_load_strict_names_line(tmp_path):
+    path = tmp_path / "hist.jsonl"
+    history.append(path, _record())
+    with open(path, "a") as f:
+        f.write("{not json\n")
+    with pytest.raises(ValueError, match=r"hist\.jsonl:2"):
+        history.load(path)
+    # forensics mode skips the damage
+    assert len(history.load(path, strict=False)) == 1
+
+
+def test_tail_is_per_section_oldest_first(tmp_path):
+    recs = [_record(section="serve", wall_s=float(i)) for i in range(5)]
+    recs.insert(2, _record(section="obs"))
+    out = history.tail(recs, "serve", 3)
+    assert [r["wall_s"] for r in out] == [2.0, 3.0, 4.0]
+    assert history.tail(recs, "missing", 3) == []
+    with pytest.raises(ValueError):
+        history.tail(recs, "serve", 0)
+
+
+def test_row_metrics_flattening():
+    rows = [
+        {"name": "s0", "speedup": 2.5, "ok": True, "plan": "m0:t512",
+         "bad": float("nan"), "dispatch": {"count": 3, "overlap_fraction":
+                                           0.5, "nested": {"deep": 1}},
+         "listy": [1, 2]},
+        {"dataset": "uber", "measured_s": 0.5},
+        {"stream": "sess-1", "increment_p99_s": 0.01},
+        {"unnamed": 1.0},
+    ]
+    m = history.row_metrics(rows)
+    assert m["s0"] == {"speedup": 2.5, "dispatch.count": 3.0,
+                      "dispatch.overlap_fraction": 0.5}
+    assert m["uber"] == {"measured_s": 0.5}
+    assert m["sess-1"] == {"increment_p99_s": 0.01}
+    assert m["row[3]"] == {"unnamed": 1.0}
+
+
+def test_plan_fingerprints():
+    rows = [{"plan": "m0:t512"}, {"plan": "m0:t256"}, {"plan": "m0:t512"},
+            {"noplan": 1}, {"plan": 7}]
+    assert history.plan_fingerprints(rows) == ["m0:t256", "m0:t512"]
+
+
+def test_cli_validate(tmp_path, capsys):
+    path = tmp_path / "hist.jsonl"
+    history.append(path, _record())
+    assert history.main(["validate", str(path)]) == 0
+    assert "1 record(s) OK" in capsys.readouterr().out
+    with open(path, "a") as f:
+        f.write(json.dumps({"schema": 1}) + "\n")
+    assert history.main(["validate", str(path)]) == 1
+    assert history.main(["validate"]) == 2
+    assert history.main([]) == 2

@@ -1,0 +1,277 @@
+"""Regression gate: direction awareness, noise-calibrated bands, the
+injected-2x-slowdown guarantee, and the CLI check/update-baseline flow."""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests fall back to fixed examples
+    HAVE_HYPOTHESIS = False
+
+from repro.obs import history, regress
+
+PROV = {"ts_utc": "2026-08-08T00:00:00Z", "git_sha": "b" * 40,
+        "git_dirty": False, "host": "ci", "jax_version": "0.4",
+        "device": "cpu"}
+
+
+def _records(metric_values, section="serve", metric="latency_p99_s",
+             row="s0"):
+    """One history record per repeat, each with a single-row metric."""
+    return [history.make_record(
+        section, rows=[{"name": row, metric: float(v)}], wall_s=1.0,
+        config={"argv": [], "smoke": True}, provenance=PROV)
+        for v in metric_values]
+
+
+def _baseline(records, sections=("serve",), repeats=None):
+    return regress.baseline_from_history(
+        records, list(sections), repeats=repeats or len(records))
+
+
+# ---------------------------------------------------------------------------
+# Classification and aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_classify_directions():
+    assert regress.classify("latency_p99_s").direction == "down"
+    assert regress.classify("cache_hit_rate").direction == "up"
+    assert regress.classify("speedup").direction == "up"
+    assert regress.classify("padding_overhead").direction == "down"
+    assert regress.classify("imbalance_contiguous").direction == "down"
+    assert regress.classify("host_syncs").direction == "down"
+    # gauge sub-dict keys classify by their leaf
+    assert regress.classify("dispatch.overlap_fraction").direction == "up"
+    assert regress.classify("queue.oldest_age_s").direction == "down"
+    # first-match-wins ordering: a hit RATE is up-good even though it
+    # would also match broad down-good timing-ish patterns
+    assert regress.classify("cache_hit_rate").pattern == "*hit_rate*"
+    assert regress.classify("requests") is None
+    assert regress.classify("plan") is None
+
+
+def test_best_and_spread():
+    assert regress.best([3.0, 1.0, 2.0], "down") == 1.0
+    assert regress.best([3.0, 1.0, 2.0], "up") == 3.0
+    assert regress.rel_spread([1.0]) == 0.0
+    assert regress.rel_spread([1.0, 1.1]) == pytest.approx(0.1 / 1.1)
+    with pytest.raises(ValueError):
+        regress.best([], "down")
+
+
+def test_portability_split():
+    assert regress.classify("latency_p99_s").portable is False
+    assert regress.classify("bat_rps").portable is False
+    assert regress.classify("cache_hit_rate").portable is True
+    assert regress.classify("speedup").portable is True
+
+
+# ---------------------------------------------------------------------------
+# No false positive on in-band jitter (min-of-k)
+# ---------------------------------------------------------------------------
+
+
+def _gate(baseline_values, fresh_values, metric="latency_p99_s", **kw):
+    base = _baseline(_records(baseline_values, metric=metric))
+    findings = regress.compare_sections(
+        base, _records(fresh_values, metric=metric), ["serve"],
+        repeats=len(fresh_values), **kw)
+    (f,) = [f for f in findings if f.metric == metric]
+    return f
+
+
+def test_no_false_positive_on_inband_jitter_seeded():
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        base_vals = 1.0 + 0.02 * rng.random(3)
+        fresh_vals = 1.0 + 0.02 * rng.random(3)
+        f = _gate(list(base_vals), list(fresh_vals))
+        assert f.status in ("ok", "improved"), f.describe()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.floats(0.98, 1.02), min_size=1, max_size=4),
+           st.lists(st.floats(0.98, 1.02), min_size=1, max_size=4))
+    def test_no_false_positive_on_inband_jitter(base_vals, fresh_vals):
+        f = _gate(base_vals, fresh_vals)
+        assert f.status in ("ok", "improved"), f.describe()
+
+
+def test_one_outlier_repeat_does_not_fail():
+    # min-of-k: a single stalled repeat is absorbed as long as any
+    # repeat lands in band.
+    f = _gate([1.0, 1.0], [5.0, 1.01, 1.0])
+    assert f.status == "ok"
+    assert f.observed == 1.0
+
+
+def test_baseline_noise_widens_band_for_agreeing_fresh_repeats():
+    # A metric that was demonstrably jittery when the baseline was
+    # blessed (speedup swinging ~2x between repeats) must not fail the
+    # gate when the fresh repeats happen to agree with each other on
+    # the low side: the baseline's recorded spread widens the band.
+    base = _baseline(_records([3.54, 1.84], metric="speedup"))
+    assert base["noise"]["serve"]["s0"]["speedup"] == pytest.approx(
+        (3.54 - 1.84) / 3.54)
+    findings = regress.compare_sections(
+        base, _records([1.84, 1.86], metric="speedup"), ["serve"],
+        repeats=2)
+    (f,) = [f for f in findings if f.metric == "speedup"]
+    assert f.status == "ok", f.describe()
+    # ...but the MAX_REL_TOL cap still catches a shift past the
+    # envelope any jitter could justify.
+    findings = regress.compare_sections(
+        base, _records([0.60, 0.61], metric="speedup"), ["serve"],
+        repeats=2)
+    (f,) = [f for f in findings if f.metric == "speedup"]
+    assert f.status == "regression", f.describe()
+
+
+def test_baseline_without_noise_block_still_checks():
+    # Pre-noise-block baselines (or hand-written ones) gate exactly as
+    # before: absent spread contributes 0 to the band.
+    base = _baseline(_records([1.0, 1.01]))
+    del base["noise"]
+    findings = regress.compare_sections(
+        base, _records([1.02]), ["serve"], repeats=1)
+    (f,) = [f for f in findings if f.metric == "latency_p99_s"]
+    assert f.status == "ok", f.describe()
+
+
+# ---------------------------------------------------------------------------
+# Injected 2x slowdown always fails
+# ---------------------------------------------------------------------------
+
+
+def test_injected_2x_slowdown_fails():
+    f = _gate([1.0, 1.02, 0.99], [2.0, 2.04, 1.98])
+    assert f.status == "regression", f.describe()
+
+
+def test_2x_fails_even_with_huge_noise_mult():
+    # The MAX_REL_TOL cap: no noise calibration can widen the band past
+    # 80%, so a clean 2x (rel_change = 1.0) is always out of band.
+    f = _gate([1.0], [2.0, 2.6], noise_mult=1e6)
+    assert f.tol == regress.MAX_REL_TOL
+    assert f.status == "regression", f.describe()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(st.floats(0.01, 100.0), st.floats(1.0, 50.0),
+           st.lists(st.floats(0.95, 1.05), min_size=1, max_size=4))
+    def test_2x_slowdown_guarantee(base, noise_mult, jitter):
+        f = _gate([base], [2.0 * base * j for j in jitter],
+                  noise_mult=noise_mult)
+        assert f.status == "regression", f.describe()
+
+
+# ---------------------------------------------------------------------------
+# Direction awareness
+# ---------------------------------------------------------------------------
+
+
+def test_hit_rate_drop_fails_latency_drop_passes():
+    # Down-good metric going DOWN is an improvement...
+    f = _gate([1.0], [0.4])
+    assert f.status == "improved"
+    # ...while an up-good metric going down by the same factor regresses.
+    f = _gate([0.9], [0.36], metric="cache_hit_rate")
+    assert f.status == "regression", f.describe()
+    # and an up-good metric going UP is an improvement, not a breach.
+    f = _gate([0.5], [0.9], metric="cache_hit_rate")
+    assert f.status == "improved"
+
+
+def test_portable_only_demotes_timings():
+    f = _gate([1.0], [3.0], portable_only=True)
+    assert f.status == "info"        # timing: not gated cross-machine
+    f = _gate([0.9], [0.2], metric="cache_hit_rate", portable_only=True)
+    assert f.status == "regression"  # portable ratio still gated
+
+
+# ---------------------------------------------------------------------------
+# Missing witnesses
+# ---------------------------------------------------------------------------
+
+
+def test_missing_section_and_vanished_metric_fail():
+    base = _baseline(_records([1.0]))
+    findings = regress.compare_sections(base, [], ["serve"], repeats=1)
+    assert [f.status for f in findings] == ["missing"]
+    # metric vanished from every fresh repeat
+    fresh = _records([1.0], metric="other_metric_s")
+    findings = regress.compare_sections(base, fresh, ["serve"], repeats=1)
+    assert any(f.status == "missing" and f.metric == "latency_p99_s"
+               for f in findings)
+
+
+def test_new_metric_is_not_a_failure():
+    base = _baseline(_records([1.0]))
+    fresh = [history.make_record(
+        "serve", rows=[{"name": "s0", "latency_p99_s": 1.0,
+                        "brand_new_s": 5.0}], wall_s=1.0,
+        config={"argv": [], "smoke": True}, provenance=PROV)]
+    findings = regress.compare_sections(base, fresh, ["serve"], repeats=1)
+    by_metric = {f.metric: f.status for f in findings}
+    assert by_metric["brand_new_s"] == "new"
+    assert by_metric["latency_p99_s"] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# CLI flow: update-baseline then check
+# ---------------------------------------------------------------------------
+
+
+def _write_history(path, records):
+    for r in records:
+        history.append(path, r)
+
+
+def test_cli_update_then_clean_check_passes(tmp_path, capsys):
+    hist = tmp_path / "hist.jsonl"
+    base = tmp_path / "base.json"
+    _write_history(hist, _records([1.0, 1.01]))
+    assert regress.main(["--history", str(hist), "--baseline", str(base),
+                         "--sections", "serve", "--repeats", "2",
+                         "--update-baseline"]) == 0
+    doc = json.loads(base.read_text())
+    assert doc["schema"] == regress.BASELINE_SCHEMA
+    assert doc["sections"]["serve"]["s0"]["latency_p99_s"] == 1.0
+    # unchanged re-run over the same k repeats passes
+    assert regress.main(["--history", str(hist), "--baseline", str(base),
+                         "--sections", "serve", "--repeats", "2",
+                         "--check"]) == 0
+    assert "PASS" in capsys.readouterr().out
+
+
+def test_cli_injected_slowdown_fails_gate(tmp_path, capsys):
+    hist = tmp_path / "hist.jsonl"
+    base = tmp_path / "base.json"
+    _write_history(hist, _records([1.0, 1.01]))
+    assert regress.main(["--history", str(hist), "--baseline", str(base),
+                         "--sections", "serve", "--repeats", "2",
+                         "--update-baseline"]) == 0
+    capsys.readouterr()
+    # a 2x-slower pair of fresh records lands in the same ledger
+    _write_history(hist, _records([2.0, 2.02]))
+    assert regress.main(["--history", str(hist), "--baseline", str(base),
+                         "--sections", "serve", "--repeats", "2",
+                         "--check"]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "latency_p99_s" in out
+
+
+def test_cli_requires_exactly_one_mode(tmp_path):
+    hist = tmp_path / "hist.jsonl"
+    _write_history(hist, _records([1.0]))
+    with pytest.raises(SystemExit):
+        regress.main(["--history", str(hist), "--sections", "serve"])
+    with pytest.raises(SystemExit):
+        regress.main(["--history", str(hist), "--sections", "serve",
+                      "--check", "--update-baseline"])

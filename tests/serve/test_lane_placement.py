@@ -1,0 +1,187 @@
+"""Load-aware pod lane placement: serpentine-deal order properties, the
+prepare_batch wiring (permutation + inverse), and result restoration."""
+import os
+import subprocess
+import sys
+import textwrap
+import types
+
+import numpy as np
+import pytest
+
+from repro.core.plan import pod_device_nnz, pod_imbalance, pod_lane_order
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+# ---------------------------------------------------------------------------
+# Order properties (pure planning, no jax)
+# ---------------------------------------------------------------------------
+
+
+def test_identity_cases():
+    assert pod_lane_order([5, 3, 8], 1) == [0, 1, 2]
+    assert pod_lane_order([], 4) == []
+    # not a mesh multiple: the engine pads first; raw order untouched
+    assert pod_lane_order([5, 3, 8], 2) == [0, 1, 2]
+
+
+def test_is_permutation_and_deterministic():
+    rng = np.random.default_rng(3)
+    for _ in range(30):
+        n_dev = int(rng.integers(2, 9))
+        per = int(rng.integers(1, 5))
+        nnz = rng.integers(1, 10_000, size=n_dev * per).tolist()
+        order = pod_lane_order(nnz, n_dev)
+        assert sorted(order) == list(range(len(nnz)))
+        assert order == pod_lane_order(list(nnz), n_dev)
+
+
+def test_balanced_never_worse_than_contiguous():
+    rng = np.random.default_rng(11)
+    for _ in range(100):
+        n_dev = int(rng.integers(2, 9))
+        per = int(rng.integers(1, 6))
+        nnz = rng.integers(1, 10_000, size=n_dev * per).tolist()
+        order = pod_lane_order(nnz, n_dev)
+        placed = pod_imbalance(nnz, n_dev, order)
+        contiguous = pod_imbalance(nnz, n_dev)
+        assert placed <= contiguous + 1e-9, (nnz, n_dev, placed, contiguous)
+
+
+def test_greedy_deal_beats_plain_sort_on_sorted_stream():
+    # The motivating case: a descending-nnz stream. A contiguous split
+    # of the SORTED list stacks all heavy requests on device 0; the
+    # greedy deal pairs heaviest with lightest.
+    nnz = [100, 90, 80, 70, 40, 30, 20, 10]
+    order = pod_lane_order(nnz, 4)
+    loads = pod_device_nnz(nnz, 4, order)
+    assert max(loads) - min(loads) <= 20
+    assert pod_imbalance(nnz, 4, order) < pod_imbalance(nnz, 4)
+
+
+def test_device_nnz_helpers():
+    nnz = [10, 20, 30, 40]
+    assert pod_device_nnz(nnz, 2) == [30, 70]
+    assert pod_device_nnz(nnz, 2, [3, 0, 1, 2]) == [50, 50]
+    assert pod_imbalance(nnz, 2, [3, 0, 1, 2]) == pytest.approx(1.0)
+    assert pod_imbalance([0, 0], 2) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# prepare_batch wiring (fake 4-device mesh; host half only)
+# ---------------------------------------------------------------------------
+
+
+def _fake_mesh(n):
+    return types.SimpleNamespace(axis_names=("b",),
+                                 devices=np.empty(n, dtype=object))
+
+
+def _prep(engine, tensors, **kw):
+    kw.setdefault("n_iters", 3)
+    kw.setdefault("tol", -1.0)
+    kw.setdefault("seeds", list(range(len(tensors))))
+    return engine.prepare_batch(tensors, **kw)
+
+
+def test_prepare_batch_places_and_inverts():
+    from repro.core import random_sparse
+    from repro.serve import BatchedEngine
+
+    rng = np.random.default_rng(0)
+    sizes = rng.permutation([300 - 20 * i for i in range(8)]).tolist()
+    tensors = [random_sparse((10, 9, 8), int(s), seed=i)
+               for i, s in enumerate(sizes)]
+    eng = BatchedEngine(rank=3, mesh=_fake_mesh(4))
+    prep = _prep(eng, tensors, nnz_cap=320)
+    assert prep.batch == 8 and prep.requested == 8
+    assert prep.lane_of is not None
+    assert sorted(prep.lane_of) == list(range(8))
+    # the inverse maps each request back to the lane holding its tensor
+    for i, t in enumerate(tensors):
+        assert prep.lane_nnz[prep.lane_of[i]] == t.nnz
+    # and per-lane iteration knobs moved with their tensors
+    iters = [3 + i for i in range(8)]
+    prep2 = _prep(eng, tensors, nnz_cap=320, n_iters=iters)
+    got = np.asarray(prep2.max_iters_dev)
+    for i in range(8):
+        assert int(got[prep2.lane_of[i]]) == iters[i]
+    # the placed split is no worse balanced than arrival order
+    placed = pod_imbalance(prep.lane_nnz, 4)
+    arrival = pod_imbalance([t.nnz for t in tensors], 4)
+    assert placed <= arrival + 1e-9
+
+
+def test_contiguous_engine_keeps_arrival_order():
+    from repro.core import random_sparse
+    from repro.serve import BatchedEngine
+
+    tensors = [random_sparse((10, 9, 8), 100 + 30 * i, seed=i)
+               for i in range(4)]
+    eng = BatchedEngine(rank=3, mesh=_fake_mesh(4),
+                        lane_placement="contiguous")
+    prep = _prep(eng, tensors, nnz_cap=256)
+    assert prep.lane_of is None
+    assert prep.lane_nnz == [t.nnz for t in tensors]
+    with pytest.raises(ValueError, match="lane_placement"):
+        BatchedEngine(rank=3, lane_placement="best-effort")
+
+
+def test_placement_covers_padding_lanes():
+    from repro.core import random_sparse
+    from repro.serve import BatchedEngine
+
+    # 6 requests pad to 8 lanes (repeat-last); placement permutes all 8
+    # but only the first `requested` entries of lane_of are consumed.
+    tensors = [random_sparse((10, 9, 8), 60 + 37 * i, seed=i)
+               for i in range(6)]
+    eng = BatchedEngine(rank=3, mesh=_fake_mesh(4))
+    prep = _prep(eng, tensors, nnz_cap=256)
+    assert prep.requested == 6 and prep.batch == 8
+    if prep.lane_of is not None:
+        assert sorted(prep.lane_of) == list(range(8))
+        for i, t in enumerate(tensors):
+            assert prep.lane_nnz[prep.lane_of[i]] == t.nnz
+
+
+# ---------------------------------------------------------------------------
+# End to end on a real 8-device pod (subprocess, slow lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_balanced_results_match_contiguous_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    code = """
+        import numpy as np
+        from repro.core import random_sparse
+        from repro.launch.mesh import make_batch_mesh
+        from repro.serve import BatchedEngine
+
+        rng = np.random.default_rng(0)
+        sizes = rng.permutation([400 - 20 * i for i in range(16)]).tolist()
+        ts = [random_sparse((18, 13, 9), int(s), seed=i,
+                            distribution="powerlaw")
+              for i, s in enumerate(sizes)]
+        kw = dict(n_iters=5, tol=-1.0, seeds=list(range(16)), nnz_cap=512)
+        mesh = make_batch_mesh(8)
+        bal = BatchedEngine(rank=3, check_every=2, mesh=mesh).\\
+            decompose_batch(ts, **kw)
+        con = BatchedEngine(rank=3, check_every=2, mesh=mesh,
+                            lane_placement="contiguous").\\
+            decompose_batch(ts, **kw)
+        for a, b in zip(bal, con):
+            assert a.fits == b.fits
+            for Fa, Fb in zip(a.factors, b.factors):
+                np.testing.assert_array_equal(Fa, Fb)
+        print("PASS bit-identical across placements")
+    """
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "PASS" in out.stdout
